@@ -1,0 +1,44 @@
+"""Fig. 3 analogue: CompBin & PG-Fuse speedup over baseline ParaGrapher.
+
+Claim validated (paper §V-C): CompBin (eq. 1 shift+add decode) beats
+WebGraph decode for small graphs (paper: up to 21.8x); for large
+well-compressed web graphs the fat CompBin read becomes storage-bound and
+WebGraph(+PG-Fuse) wins.
+"""
+
+from __future__ import annotations
+
+from benchmarks.datasets import build_suite
+from benchmarks.loading import (load_compbin, load_webgraph_direct,
+                                load_webgraph_pgfuse)
+
+
+def run(workdir: str, profile: str = "lustre_ssd", names=None) -> list[dict]:
+    rows = []
+    for ds in build_suite(workdir, names):
+        base = load_webgraph_direct(ds.wg_path, profile)
+        fuse = load_webgraph_pgfuse(ds.wg_path, profile)
+        cb = load_compbin(ds.cb_path, profile)
+        rows.append({
+            "name": ds.name, "E": ds.csr.n_edges,
+            "base_s": base.total_s,
+            "compbin_speedup": base.total_s / max(cb.total_s, 1e-12),
+            "pgfuse_speedup": base.total_s / max(fuse.total_s, 1e-12),
+            "compbin_decode_s": cb.decode_s, "webgraph_decode_s": base.decode_s,
+        })
+    return rows
+
+
+def main(workdir: str = "/tmp/repro_bench", profile: str = "lustre_ssd") -> None:
+    rows = run(workdir, profile)
+    print(f"[fig3] storage profile: {profile}")
+    print(f"{'name':<12}{'|E|':>10}{'CompBin x':>10}{'PG-Fuse x':>10}"
+          f"{'decode CB/WG s':>18}")
+    for r in rows:
+        print(f"{r['name']:<12}{r['E']:>10}{r['compbin_speedup']:>10.2f}"
+              f"{r['pgfuse_speedup']:>10.2f}"
+              f"{r['compbin_decode_s']:>9.3f}/{r['webgraph_decode_s']:<8.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Roofline report: render results/dryrun.json into the §Roofline table.
+
+    python -m benchmarks.roofline [--in results/dryrun.json] [--mesh 16x16]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.launch.hlo_analysis import HBM_BW, ICI_BW, PEAK_FLOPS
+
+
+def fmt_row(rec: dict) -> str:
+    if rec.get("status") == "SKIP":
+        return (f"| {rec['arch']} | {rec['shape']} | {rec.get('variant','baseline')} "
+                f"| SKIP | — | — | — | — | — | {rec['skip_reason'][:60]}... |")
+    if rec.get("status") != "OK":
+        return (f"| {rec['arch']} | {rec['shape']} | {rec.get('variant','baseline')} "
+                f"| {rec.get('status')} | — | — | — | — | — | |")
+    r = rec["roofline"]
+    dom_t = max(r["t_compute"], r["t_memory"], r["t_collective"])
+    frac = r["t_compute"] / max(dom_t, 1e-30)
+    mem_gb = rec["memory"]["peak_est_bytes"] / 2**30
+    return (f"| {rec['arch']} | {rec['shape']} | {rec.get('variant','baseline')} "
+            f"| {rec.get('kind','')} "
+            f"| {r['t_compute']*1e3:.2f} | {r['t_memory']*1e3:.2f} "
+            f"| {r['t_collective']*1e3:.2f} | {r['dominant']} "
+            f"| {frac:.2f} | {r['useful_ratio'] if r['useful_ratio'] is None else round(r['useful_ratio'],3)} "
+            f"| {mem_gb:.1f} |")
+
+
+HEADER = ("| arch | shape | variant | kind | t_compute ms | t_memory ms "
+          "| t_collective ms | dominant | compute/roofline | useful ratio "
+          "| peak GB/dev |\n"
+          "|---|---|---|---|---|---|---|---|---|---|---|")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--in", dest="inp", default="results/dryrun.json")
+    ap.add_argument("--mesh", default=None)
+    ap.add_argument("--variant", default=None)
+    args = ap.parse_args()
+    with open(args.inp) as f:
+        data = json.load(f)
+    recs = sorted(data.values(), key=lambda r: (r.get("family", ""),
+                                                r["arch"], r["shape"],
+                                                r.get("mesh", "")))
+    print(f"Hardware model: {PEAK_FLOPS/1e12:.0f} TFLOP/s bf16/chip, "
+          f"{HBM_BW/1e9:.0f} GB/s HBM, {ICI_BW/1e9:.0f} GB/s/link ICI")
+    print(HEADER)
+    for rec in recs:
+        if args.mesh and rec.get("mesh") != args.mesh:
+            continue
+        if args.variant and rec.get("variant", "baseline") != args.variant:
+            continue
+        print(fmt_row(rec))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""Benchmark aggregator — one harness per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--workdir DIR] [--fast]
+
+Prints one ``name,value,derived`` CSV block per artifact plus the
+formatted tables.  Absolute numbers are for THIS container (CPU + tmpfs +
+simulated storage profiles); the paper's relative effects are the claims
+under test (see EXPERIMENTS.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workdir", default="/tmp/repro_bench")
+    ap.add_argument("--profile", default="lustre_ssd")
+    ap.add_argument("--fast", action="store_true",
+                    help="small suite only (CI)")
+    args = ap.parse_args()
+
+    names = ["web-sm", "social-sm", "web-md"] if args.fast else None
+
+    from benchmarks import (fig2_pgfuse, fig3_compbin, fig4_crossover,
+                            table1_datasets)
+
+    t0 = time.time()
+    print("=" * 72)
+    print("Table I — datasets & format sizes")
+    print("=" * 72)
+    t1_rows = table1_datasets.run(args.workdir, names)
+    for r in t1_rows:
+        print(f"table1,{r['name']},wg_MiB={r['webgraph_MiB']:.2f},"
+              f"cb_MiB={r['compbin_MiB']:.2f},ratio={r['compression_ratio']:.2f}")
+
+    print("=" * 72)
+    print("Fig. 2 — PG-Fuse on/off (WebGraph loading)")
+    print("=" * 72)
+    f2 = fig2_pgfuse.run(args.workdir, args.profile, names)
+    for r in f2:
+        print(f"fig2,{r['name']},base_s={r['base_s']:.4f},"
+              f"pgfuse_s={r['pgfuse_s']:.4f},speedup={r['speedup']:.2f}")
+    sp = [r["speedup"] for r in f2]
+    print(f"fig2,SUMMARY,speedup_min={min(sp):.2f},speedup_max={max(sp):.2f},"
+          f"paper_range=0.9-7.6")
+
+    print("=" * 72)
+    print("Fig. 3 — CompBin & PG-Fuse speedups over baseline")
+    print("=" * 72)
+    f3 = fig3_compbin.run(args.workdir, args.profile, names)
+    for r in f3:
+        print(f"fig3,{r['name']},compbin_x={r['compbin_speedup']:.2f},"
+              f"pgfuse_x={r['pgfuse_speedup']:.2f}")
+    cb = [r["compbin_speedup"] for r in f3]
+    print(f"fig3,SUMMARY,compbin_max={max(cb):.2f},paper_max=21.8")
+
+    print("=" * 72)
+    print("Fig. 4 — PG-Fuse vs CompBin crossover (shared-contended profile)")
+    print("=" * 72)
+    f4 = fig4_crossover.run(args.workdir, "lustre_shared", names)
+    for r in f4:
+        print(f"fig4,{r['name']},size_diff_MiB={r['size_diff_MiB']:.2f},"
+              f"ratio={r['pgfuse_over_compbin']:.3f}")
+    x = fig4_crossover.crossover_MiB(f4)
+    print(f"fig4,SUMMARY,crossover_MiB={x if x else 'none'}")
+
+    print("=" * 72)
+    print(f"done in {time.time()-t0:.1f}s  "
+          f"(roofline table: python -m benchmarks.roofline)")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,75 @@
+#!/usr/bin/env python
+"""Quickstart: the paper in one file.
+
+Generates an RMAT graph, saves it as WebGraph-style and CompBin, loads it
+back through ParaGrapher with and without PG-Fuse, verifies the loads are
+identical, and prints the loading/decode split for each path.
+
+    PYTHONPATH=src python examples/quickstart.py [--format compbin]
+"""
+
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.core import paragrapher
+from repro.graph import rmat
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--format", choices=["compbin", "webgraph", "both"],
+                    default="both")
+    ap.add_argument("--scale", type=int, default=14)
+    ap.add_argument("--workdir", default="/tmp/repro_quickstart")
+    args = ap.parse_args()
+    os.makedirs(args.workdir, exist_ok=True)
+
+    print(f"generating RMAT scale={args.scale} ...")
+    csr = rmat(args.scale, 16, seed=0)
+    print(f"  |V|={csr.n_vertices:,} |E|={csr.n_edges:,}")
+
+    formats = ["compbin", "webgraph"] if args.format == "both" else [args.format]
+    results = {}
+    for fmt in formats:
+        path = os.path.join(args.workdir, f"g.{fmt}")
+        n = paragrapher.save_graph(path, csr, format=fmt)
+        print(f"[{fmt}] wrote {n/2**20:.2f} MiB")
+
+        for use_fuse in (False, True):
+            t0 = time.perf_counter()
+            with paragrapher.open_graph(path, use_pgfuse=use_fuse,
+                                        pgfuse_block_size=1 << 22) as g:
+                loaded = g.read_full()
+                dt = time.perf_counter() - t0
+                stats = g.pgfuse_stats()
+            assert loaded == csr, "loaded graph differs!"
+            tag = "PG-Fuse" if use_fuse else "direct "
+            extra = (f" underlying_reads={stats.underlying_reads} "
+                     f"hits={stats.cache_hits}" if stats else "")
+            print(f"[{fmt}] {tag} loaded+verified in {dt*1e3:8.1f} ms{extra}")
+            results[(fmt, use_fuse)] = dt
+
+    if len(formats) == 2:
+        speedup = results[("webgraph", False)] / results[("compbin", False)]
+        print(f"\nCompBin vs WebGraph decode speedup on this host: "
+              f"{speedup:.1f}x (paper: up to 21.8x on 128-core EPYC)")
+
+    # async partitioned load (the ParaGrapher consumer/producer pattern)
+    path = os.path.join(args.workdir, f"g.{formats[0]}")
+    with paragrapher.open_graph(path, use_pgfuse=True) as g:
+        got = []
+        ar = g.read_async(g.partition_plan(8),
+                          lambda buf: got.append(len(buf.neighbors)),
+                          n_buffers=3, n_workers=4)
+        ar.wait(60)
+        print(f"async load: {len(got)} partitions, {sum(got):,} edges total")
+
+
+if __name__ == "__main__":
+    main()

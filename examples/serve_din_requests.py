@@ -1,0 +1,77 @@
+#!/usr/bin/env python
+"""Serve a DIN CTR model with batched requests, CompBin-packed ID streams.
+
+Request history/candidate IDs arrive CompBin-packed (3 bytes per ID for a
+10M-item catalog — the paper's byte-packing applied to the recsys request
+path), are decoded with eq. (1), embedded via the take+segment EmbeddingBag,
+and scored with target attention.
+
+    PYTHONPATH=src python examples/serve_din_requests.py --requests 20
+"""
+
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import compbin
+from repro.models.recsys import din
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--items", type=int, default=100_000)
+    args = ap.parse_args()
+
+    cfg = din.DINConfig(name="din-serve", embed_dim=18, seq_len=100,
+                        n_items=args.items, n_cates=1000,
+                        attn_mlp=(80, 40), mlp=(200, 80))
+    params = din.init_params(cfg, jax.random.key(0))
+    b = compbin.bytes_per_vertex(cfg.n_items)
+    print(f"DIN catalog {cfg.n_items:,} items -> {b} bytes/ID on the wire "
+          f"({(4-b)/4:.0%} smaller than int32)")
+
+    fwd = jax.jit(lambda p, batch: din.forward(p, batch, cfg))
+    rng = np.random.default_rng(0)
+    lat = []
+    wire_bytes = 0
+    for _ in range(args.requests):
+        # requests arrive packed (as they would over the network / from
+        # the feature store through PG-Fuse)
+        hist = rng.integers(0, cfg.n_items, (args.batch, cfg.seq_len))
+        cand = rng.integers(0, cfg.n_items, args.batch)
+        packed_hist = compbin.encode_ids(hist.reshape(-1).astype(np.uint64), b)
+        packed_cand = compbin.encode_ids(cand.astype(np.uint64), b)
+        wire_bytes += packed_hist.nbytes + packed_cand.nbytes
+
+        t0 = time.perf_counter()
+        hist_ids = compbin.decode_ids(packed_hist, b).astype(np.int32)
+        cand_ids = compbin.decode_ids(packed_cand, b).astype(np.int32)
+        batch = {
+            "hist_items": jnp.asarray(hist_ids.reshape(args.batch, cfg.seq_len)),
+            "hist_cates": jnp.asarray(hist_ids.reshape(args.batch, cfg.seq_len) % cfg.n_cates),
+            "cand_item": jnp.asarray(cand_ids),
+            "cand_cate": jnp.asarray(cand_ids % cfg.n_cates),
+        }
+        scores = fwd(params, batch)
+        scores.block_until_ready()
+        lat.append(time.perf_counter() - t0)
+
+    lat_ms = np.asarray(lat[2:]) * 1e3
+    print(f"batch={args.batch}: p50 {np.percentile(lat_ms, 50):.2f} ms, "
+          f"p99 {np.percentile(lat_ms, 99):.2f} ms "
+          f"({args.batch/np.percentile(lat_ms,50)*1e3:,.0f} req/s/replica)")
+    print(f"wire traffic: {wire_bytes/2**20:.2f} MiB packed "
+          f"(int32 would be {wire_bytes/b*4/2**20:.2f} MiB)")
+
+
+if __name__ == "__main__":
+    main()

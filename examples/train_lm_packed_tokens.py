@@ -1,0 +1,108 @@
+#!/usr/bin/env python
+"""Train a ~100M-param LM for a few hundred steps from CompBin-packed
+token shards (the paper's byte-packing applied to the LM input pipeline).
+
+Default config is a ~103M-param llama-style model; --tiny switches to a
+seconds-scale config for CI.
+
+    PYTHONPATH=src python examples/train_lm_packed_tokens.py --steps 300
+"""
+
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import PrefetchIterator, TokenShardReader, write_token_shard
+from repro.models import transformer as tf
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+from repro.checkpoint import AsyncCheckpointer
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--workdir", default="/tmp/repro_lm_example")
+    args = ap.parse_args()
+    os.makedirs(args.workdir, exist_ok=True)
+
+    if args.tiny:
+        cfg = tf.TransformerConfig(
+            name="lm-tiny", n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+            d_head=16, d_ff=128, vocab=2048, dtype=jnp.float32,
+            tie_embeddings=True)
+    else:
+        # ~103M params: 12L x 640d x (10H/5KV) x 2560ff, 32k vocab
+        cfg = tf.TransformerConfig(
+            name="lm-100m", n_layers=12, d_model=640, n_heads=10,
+            n_kv_heads=5, d_head=64, d_ff=2560, vocab=32_768,
+            dtype=jnp.float32, tie_embeddings=True, attn_chunk=128)
+    print(f"model: {cfg.name}, {cfg.n_params()/1e6:.1f}M params")
+
+    # synthetic corpus with learnable bigram structure (loss must drop
+    # clearly below the unigram entropy)
+    shard = os.path.join(args.workdir, f"corpus_{cfg.vocab}.ctok")
+    if not os.path.exists(shard):
+        rng = np.random.default_rng(0)
+        n = 2_000_000 if not args.tiny else 100_000
+        nxt = rng.integers(0, cfg.vocab, cfg.vocab)  # deterministic bigram
+        toks = np.empty(n, np.int64)
+        toks[0] = 1
+        noise = rng.random(n) < 0.1
+        rand = rng.integers(0, cfg.vocab, n)
+        for i in range(1, n):
+            toks[i] = rand[i] if noise[i] else nxt[toks[i - 1]]
+        write_token_shard(shard, toks, cfg.vocab)
+        print(f"wrote {os.path.getsize(shard)/2**20:.1f} MiB packed shard "
+              f"({3}B/token vs {4}B int32: 25% smaller)")
+
+    reader = TokenShardReader(shard, use_pgfuse=True,
+                              pgfuse_block_size=1 << 20)
+    raw = reader.batches(args.batch, args.seq, seed=0)
+    batches = PrefetchIterator(
+        ({"tokens": jnp.asarray(b[:, :-1]), "labels": jnp.asarray(b[:, 1:])}
+         for b in raw), depth=2)
+
+    params = tf.init_params(cfg, jax.random.key(0))
+    opt_cfg = AdamWConfig(lr=3e-4, warmup_steps=20, total_steps=args.steps)
+    opt = adamw_init(params, opt_cfg)
+    ckpt = AsyncCheckpointer(os.path.join(args.workdir, "ckpt"), keep_last=2)
+
+    @jax.jit
+    def step(params, opt, batch):
+        loss, grads = jax.value_and_grad(tf.loss_fn)(
+            params, batch["tokens"], batch["labels"], cfg)
+        params, opt, met = adamw_update(params, grads, opt, opt_cfg)
+        return params, opt, loss
+
+    t0 = time.time()
+    losses = []
+    for i in range(1, args.steps + 1):
+        params, opt, loss = step(params, opt, next(batches))
+        losses.append(float(loss))
+        if i % 25 == 0:
+            tok_s = args.batch * args.seq * i / (time.time() - t0)
+            print(f"step {i:4d} loss {losses[-1]:.4f} ({tok_s:,.0f} tok/s)")
+        if i % 100 == 0:
+            ckpt.save(i, {"params": params, "opt": opt})
+    ckpt.wait()
+    print(f"\nloss: {np.mean(losses[:20]):.3f} -> {np.mean(losses[-20:]):.3f} "
+          f"(bigram structure learned: must be well below "
+          f"ln(vocab)={np.log(cfg.vocab):.2f})")
+    st = reader.pgfuse_stats()
+    print(f"PG-Fuse: {st.underlying_reads} underlying reads / "
+          f"{st.cache_hits:,} hits")
+    reader.close()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,175 @@
+"""Sharded, asynchronous, restart-safe checkpointing.
+
+Layout: ``<dir>/step_<N>/`` holding one ``.npy`` per pytree leaf plus a
+``manifest.json`` with the treedef, dtypes, and a completion marker.
+Writes go to ``step_<N>.tmp`` and are atomically renamed, so a crash
+mid-save never corrupts the restore path — ``restore_latest`` only
+considers directories with a manifest (i.e. fully renamed).
+
+* **Async**: ``AsyncCheckpointer.save`` snapshots the device arrays to host
+  (blocking only for the device->host copy) and writes on a background
+  thread, overlapping the next training steps.
+* **Elastic restart**: leaves are stored as *global* (unsharded) arrays;
+  ``restore(..., shardings=...)`` re-shards onto whatever mesh the new job
+  runs — device counts may differ across restarts (see
+  distributed/elastic.py and tests/test_checkpoint.py::test_elastic).
+* **keep_last**: old steps are garbage-collected after a successful save.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import ml_dtypes
+import numpy as np
+
+_MANIFEST = "manifest.json"
+
+# numpy can't serialize ml_dtypes natively; store via same-width int views
+_VIEW_CONTAINERS = {
+    "bfloat16": np.uint16,
+    "float8_e4m3fn": np.uint8,
+    "float8_e5m2": np.uint8,
+}
+
+
+def _to_savable(arr: np.ndarray) -> tuple[np.ndarray, str]:
+    dt = str(arr.dtype)
+    container = _VIEW_CONTAINERS.get(dt)
+    if container is not None:
+        return arr.view(container), dt
+    return arr, dt
+
+
+def _from_saved(arr: np.ndarray, dtype_str: str) -> np.ndarray:
+    if dtype_str in _VIEW_CONTAINERS:
+        return arr.view(getattr(ml_dtypes, dtype_str))
+    return arr
+
+
+def _flatten_with_paths(tree: Any) -> tuple[list[tuple[str, Any]], Any]:
+    flat, treedef = jax.tree.flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out.append((key, leaf))
+    return out, treedef
+
+
+def save(ckpt_dir: str, step: int, tree: Any, *, keep_last: int = 3) -> str:
+    """Blocking save. Returns the final checkpoint path."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    leaves, _ = _flatten_with_paths(tree)
+    names = []
+    for key, leaf in leaves:
+        arr = np.asarray(jax.device_get(leaf))
+        savable, dtype_str = _to_savable(arr)
+        fname = key.replace("/", "__") + ".npy"
+        np.save(os.path.join(tmp, fname), savable)
+        names.append({"key": key, "file": fname, "dtype": dtype_str,
+                      "shape": list(arr.shape)})
+    with open(os.path.join(tmp, _MANIFEST), "w") as f:
+        json.dump({"step": step, "leaves": names}, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    _gc(ckpt_dir, keep_last)
+    return final
+
+
+def _gc(ckpt_dir: str, keep_last: int) -> None:
+    steps = sorted(_list_steps(ckpt_dir))
+    for s in steps[:-keep_last] if keep_last > 0 else []:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"), ignore_errors=True)
+
+
+def _list_steps(ckpt_dir: str) -> list[int]:
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            if os.path.exists(os.path.join(ckpt_dir, name, _MANIFEST)):
+                out.append(int(name[5:]))
+    return out
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    steps = _list_steps(ckpt_dir)
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: int, tree_like: Any, *,
+            shardings: Any = None) -> Any:
+    """Restore into the structure of ``tree_like``; optionally re-shard each
+    leaf with the matching entry of ``shardings`` (elastic restart)."""
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, _MANIFEST)) as f:
+        manifest = json.load(f)
+    by_key = {e["key"]: e for e in manifest["leaves"]}
+    leaves, treedef = _flatten_with_paths(tree_like)
+    shard_leaves = (jax.tree.leaves(shardings, is_leaf=lambda x: x is None or
+                                    isinstance(x, jax.sharding.Sharding))
+                    if shardings is not None else [None] * len(leaves))
+    out = []
+    for (key, like), shard in zip(leaves, shard_leaves):
+        entry = by_key.get(key)
+        if entry is None:
+            raise KeyError(f"checkpoint at {path} missing leaf {key!r}")
+        arr = _from_saved(np.load(os.path.join(path, entry["file"])),
+                          entry["dtype"])
+        if shard is not None:
+            out.append(jax.device_put(arr, shard))
+        else:
+            out.append(jax.numpy.asarray(arr))
+    return treedef.unflatten(out)
+
+
+def restore_latest(ckpt_dir: str, tree_like: Any, *, shardings: Any = None
+                   ) -> tuple[Optional[int], Any]:
+    step = latest_step(ckpt_dir)
+    if step is None:
+        return None, tree_like
+    return step, restore(ckpt_dir, step, tree_like, shardings=shardings)
+
+
+class AsyncCheckpointer:
+    """Background-thread checkpoint writer (one in flight at a time)."""
+
+    def __init__(self, ckpt_dir: str, *, keep_last: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep_last = keep_last
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def save(self, step: int, tree: Any) -> None:
+        self.wait()  # one in flight; also surfaces prior errors
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+
+        def _write():
+            try:
+                save(self.ckpt_dir, step, host_tree, keep_last=self.keep_last)
+            except BaseException as e:  # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=_write, daemon=True,
+                                        name=f"ckpt-save-{step}")
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err

@@ -1,0 +1,30 @@
+"""Architecture registry: ``--arch <id>`` resolution for every launcher."""
+
+from __future__ import annotations
+
+from repro.configs import (dbrx_132b, dimenet, din, gcn_cora,  # noqa: F401
+                           meshgraphnet, pna, qwen2_1_5b, qwen2_moe_a2_7b,
+                           shapes, smollm_360m, stablelm_1_6b)
+from repro.configs.base import ArchSpec
+
+_MODULES = [qwen2_moe_a2_7b, dbrx_132b, smollm_360m, qwen2_1_5b,
+            stablelm_1_6b, dimenet, meshgraphnet, gcn_cora, pna, din]
+
+REGISTRY: dict[str, ArchSpec] = {m.SPEC.arch_id: m.SPEC for m in _MODULES}
+
+ARCH_IDS = list(REGISTRY)
+
+
+def get_arch(arch_id: str) -> ArchSpec:
+    if arch_id not in REGISTRY:
+        raise KeyError(f"unknown arch {arch_id!r}; available: {ARCH_IDS}")
+    return REGISTRY[arch_id]
+
+
+def all_cells() -> list[tuple[str, str]]:
+    """All (arch, shape) cells of the assignment — 40 in total."""
+    out = []
+    for arch_id, spec in REGISTRY.items():
+        for shape_id in spec.shapes:
+            out.append((arch_id, shape_id))
+    return out

@@ -1,0 +1,99 @@
+"""Hybrid format-selection policy (paper §V-D / future work §VI).
+
+Figure 4 of the paper shows a crossover: when the storage-size difference
+``compbin_size - webgraph_size`` is small (< ~50 GiB on the paper's
+system), CompBin/binary CSR loads faster; when it approaches/exceeds
+~100 GiB, WebGraph + PG-Fuse wins because the read becomes storage-
+bandwidth limited.  The thresholds depend on storage bandwidth and
+decompression throughput, so we model loading time explicitly and let the
+constants be calibrated on the running system:
+
+    t_compbin  = compbin_size / storage_bw + |E| / compbin_decode_rate
+    t_webgraph = webgraph_size / storage_bw + |E| / webgraph_decode_rate
+
+and choose the smaller.  ``calibrate()`` measures the two decode rates and
+the storage bandwidth with short probes on generated data.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import io
+import time
+
+import numpy as np
+
+from repro.core import compbin, webgraph
+from repro.core.csr import CSR
+
+
+@dataclasses.dataclass
+class SystemModel:
+    storage_bw: float = 2e9            # bytes/s sequential read
+    compbin_decode_rate: float = 2e8   # edges/s (shift+add, eq. 1)
+    webgraph_decode_rate: float = 2e6  # edges/s (bit-level gamma/zeta)
+
+    def load_time_compbin(self, n_vertices: int, n_edges: int) -> float:
+        size = compbin.compbin_nbytes(n_vertices, n_edges)
+        return size / self.storage_bw + n_edges / self.compbin_decode_rate
+
+    def load_time_webgraph(self, webgraph_size: int, n_edges: int) -> float:
+        return webgraph_size / self.storage_bw + n_edges / self.webgraph_decode_rate
+
+
+def choose_format(n_vertices: int, n_edges: int, webgraph_size: int,
+                  model: SystemModel | None = None) -> str:
+    """Return 'compbin' or 'webgraph' — whichever the model predicts faster.
+
+    ``webgraph_size`` must be the actual compressed size on storage (it is
+    graph-dependent: web graphs compress far better than social/bio graphs).
+    """
+    model = model or SystemModel()
+    t_cb = model.load_time_compbin(n_vertices, n_edges)
+    t_wg = model.load_time_webgraph(webgraph_size, n_edges)
+    return "compbin" if t_cb <= t_wg else "webgraph"
+
+
+def crossover_size_difference(model: SystemModel, n_edges: int,
+                              n_vertices: int) -> float:
+    """Size difference (bytes) at which the two formats tie (paper Fig. 4).
+
+    Setting t_cb == t_wg:  (cb_size - wg_size) / storage_bw ==
+    |E|/wg_rate - |E|/cb_rate, i.e. the extra read time of the fat format
+    must equal the extra decode time of the compressed one.
+    """
+    extra_decode = n_edges / model.webgraph_decode_rate - n_edges / model.compbin_decode_rate
+    return extra_decode * model.storage_bw
+
+
+def calibrate(n_vertices: int = 1 << 16, n_edges: int = 1 << 18,
+              seed: int = 0) -> SystemModel:
+    """Measure decode rates (and a proxy storage bandwidth) on this host."""
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n_vertices, n_edges)
+    dst = rng.integers(0, n_vertices, n_edges)
+    from repro.core.csr import csr_from_edges
+    csr = csr_from_edges(src, dst, n_vertices, dedupe=True)
+    n_edges = csr.n_edges
+
+    cb_blob = io.BytesIO()
+    compbin.write_compbin(cb_blob, csr)
+    t0 = time.perf_counter()
+    compbin.read_compbin(io.BytesIO(cb_blob.getvalue()))
+    cb_rate = n_edges / max(1e-9, time.perf_counter() - t0)
+
+    wg_blob = io.BytesIO()
+    webgraph.write_webgraph(wg_blob, csr)
+    t0 = time.perf_counter()
+    webgraph.read_webgraph(io.BytesIO(wg_blob.getvalue()))
+    wg_rate = n_edges / max(1e-9, time.perf_counter() - t0)
+
+    # memory-to-memory copy as an upper-bound "storage" bandwidth proxy on
+    # this container; real deployments should pass a measured device figure.
+    blob = cb_blob.getvalue()
+    t0 = time.perf_counter()
+    _ = bytes(blob)
+    bw = len(blob) / max(1e-9, time.perf_counter() - t0)
+
+    return SystemModel(storage_bw=bw, compbin_decode_rate=cb_rate,
+                       webgraph_decode_rate=wg_rate)

@@ -1,0 +1,3 @@
+from repro.data.prefetch import PrefetchIterator  # noqa: F401
+from repro.data.tokens import (TokenShardReader, TokenShardWriter,  # noqa: F401
+                               write_token_shard)

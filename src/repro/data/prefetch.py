@@ -1,0 +1,49 @@
+"""Double-buffered background prefetch for host input pipelines.
+
+Keeps ``depth`` batches in flight on a producer thread so host decode /
+sampling overlaps device compute — on a pod this is the difference between
+an input-bound and a compute-bound step when the storage path stalls.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Iterable, Iterator, Optional, TypeVar
+
+T = TypeVar("T")
+
+_SENTINEL = object()
+
+
+class PrefetchIterator(Iterator[T]):
+    def __init__(self, it: Iterable[T], depth: int = 2,
+                 transform: Optional[Callable[[T], T]] = None):
+        self._q: "queue.Queue" = queue.Queue(maxsize=max(1, depth))
+        self._transform = transform
+        self._err: Optional[BaseException] = None
+        self._thread = threading.Thread(
+            target=self._run, args=(iter(it),), daemon=True, name="prefetch")
+        self._thread.start()
+
+    def _run(self, it: Iterator[T]) -> None:
+        try:
+            for item in it:
+                if self._transform is not None:
+                    item = self._transform(item)
+                self._q.put(item)
+        except BaseException as e:
+            self._err = e
+        finally:
+            self._q.put(_SENTINEL)
+
+    def __iter__(self) -> "PrefetchIterator[T]":
+        return self
+
+    def __next__(self) -> T:
+        item = self._q.get()
+        if item is _SENTINEL:
+            if self._err is not None:
+                raise self._err
+            raise StopIteration
+        return item

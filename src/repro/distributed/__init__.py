@@ -1,0 +1,5 @@
+from repro.distributed.fault_tolerance import (ResilientTrainer,  # noqa: F401
+                                               StragglerMonitor)
+from repro.distributed.sharding import (batch_axes, din_specs,  # noqa: F401
+                                        gnn_specs, lm_param_specs,
+                                        zero_opt_specs)

@@ -1,0 +1,35 @@
+"""Elastic re-meshing: move a checkpointed state onto a different mesh.
+
+Checkpoints store *global* arrays (checkpoint/checkpointer.py), so elastic
+scaling is a restore with new shardings: ``reshard(tree, mesh, specs)``
+places every leaf according to the new mesh — device counts may grow or
+shrink between restarts (e.g. a pod lost to maintenance).  For live jobs
+(no restart), ``reshard`` on the in-memory state performs the same move.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+def _is_spec_leaf(x: Any) -> bool:
+    return x is None or isinstance(x, P)
+
+
+def reshard(tree: Any, mesh: Mesh, spec_tree: Any) -> Any:
+    """device_put every leaf with its (possibly new-mesh) PartitionSpec."""
+    flat_t, treedef = jax.tree.flatten(tree)
+    flat_s = jax.tree.flatten(spec_tree, is_leaf=_is_spec_leaf)[0]
+    if len(flat_t) != len(flat_s):
+        raise ValueError(f"tree/spec mismatch: {len(flat_t)} leaves vs "
+                         f"{len(flat_s)} specs")
+    out = []
+    for x, spec in zip(flat_t, flat_s):
+        if spec is None:
+            spec = P(*([None] * getattr(x, "ndim", 0)))
+        out.append(jax.device_put(x, NamedSharding(mesh, spec)))
+    return treedef.unflatten(out)

@@ -1,0 +1,3 @@
+from repro.graph.generators import erdos_renyi, rmat  # noqa: F401
+from repro.graph.partition import edge_balanced_partition  # noqa: F401
+from repro.graph.sampler import NeighborSampler, SampledBlock  # noqa: F401

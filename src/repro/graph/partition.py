@@ -1,0 +1,45 @@
+"""Edge partitioning for distributed full-graph GNN training.
+
+Full-graph message passing shards the *edge list* across devices; each
+device computes gather(src) -> message -> partial segment-sum, and partials
+are reduced with a psum over the edge-shard axis (models/gnn/layers.py).
+The partitioner pads every shard to a common length so the result is a
+dense (n_shards, shard_len) array — shardable by a ShapeDtypeStruct.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.csr import CSR
+
+
+def edge_balanced_partition(csr: CSR, n_shards: int, *, pad_value: int = -1
+                            ) -> tuple[np.ndarray, np.ndarray]:
+    """Split the COO edge list into ``n_shards`` equal (padded) shards.
+
+    Returns (src, dst) of shape [n_shards, shard_len] with ``pad_value``
+    marking padding (segment ops drop ids < 0).
+    """
+    src, dst = csr.edge_index()
+    E = src.shape[0]
+    shard_len = -(-E // n_shards)
+    total = shard_len * n_shards
+    src_p = np.full(total, pad_value, dtype=np.int64)
+    dst_p = np.full(total, pad_value, dtype=np.int64)
+    src_p[:E] = src
+    dst_p[:E] = dst
+    return src_p.reshape(n_shards, shard_len), dst_p.reshape(n_shards, shard_len)
+
+
+def vertex_range_partition(csr: CSR, n_parts: int) -> list[tuple[int, int]]:
+    """Contiguous vertex ranges with approximately equal edge counts
+    (mirrors GraphHandle.partition_plan but for in-memory CSR)."""
+    total = csr.n_edges
+    targets = [(total * (i + 1)) // n_parts for i in range(n_parts)]
+    cuts = np.searchsorted(csr.offsets, targets, side="left")
+    cuts = np.clip(cuts, 1, csr.n_vertices)
+    bounds = [0] + sorted(set(int(c) for c in cuts))
+    if bounds[-1] != csr.n_vertices:
+        bounds.append(csr.n_vertices)
+    return [(bounds[i], bounds[i + 1]) for i in range(len(bounds) - 1)]

@@ -1,0 +1,95 @@
+"""Layer-wise fanout neighbor sampling (GraphSAGE regime) — the host-side
+producer for the ``minibatch_lg`` shape.
+
+The sampler reads adjacency through the ParaGrapher API (or an in-memory
+CSR), so on a pod each host samples its own seed range while the graph
+lives in CompBin on shared storage behind PG-Fuse — the paper's loading
+path *is* the sampler's hot loop.
+
+Output is a **padded tree layout** with static shapes (required for jit):
+layer l holds ``n_seeds * prod(fanouts[:l])`` node slots; slot ``i`` of
+layer l+1 region ``[i*f : (i+1)*f]`` holds the sampled neighbors of layer-l
+slot ``i``.  Missing neighbors (degree < fanout) are marked invalid and
+masked in the aggregation (models/gnn/layers.py::tree_aggregate).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence, Union
+
+import numpy as np
+
+from repro.core.csr import CSR
+from repro.core.paragrapher import GraphHandle
+
+
+@dataclasses.dataclass
+class SampledBlock:
+    """One minibatch of layered samples (all arrays static-shaped)."""
+
+    seeds: np.ndarray                 # int64[n_seeds]
+    layer_nodes: list[np.ndarray]     # [n_seeds * prod(fanouts[:l])] per layer
+    layer_valid: list[np.ndarray]     # bool, same shapes
+    fanouts: tuple[int, ...]
+
+    @property
+    def frontier(self) -> np.ndarray:
+        return self.layer_nodes[-1]
+
+    def num_nodes(self) -> int:
+        return sum(len(x) for x in self.layer_nodes)
+
+
+class NeighborSampler:
+    """Uniform fanout sampler over a CSR or an open ParaGrapher handle."""
+
+    def __init__(self, graph: Union[CSR, GraphHandle], fanouts: Sequence[int],
+                 *, seed: int = 0):
+        self._g = graph
+        self.fanouts = tuple(int(f) for f in fanouts)
+        self._rng = np.random.default_rng(seed)
+
+    def _neighbors(self, v: int) -> np.ndarray:
+        if isinstance(self._g, CSR):
+            return self._g.neighbors_of(v)
+        return self._g.neighbors_of(v)
+
+    @property
+    def n_vertices(self) -> int:
+        return self._g.n_vertices
+
+    def sample(self, seeds: np.ndarray) -> SampledBlock:
+        seeds = np.asarray(seeds, dtype=np.int64)
+        layer_nodes = [seeds]
+        layer_valid = [np.ones(len(seeds), dtype=bool)]
+        for f in self.fanouts:
+            prev = layer_nodes[-1]
+            prev_valid = layer_valid[-1]
+            nxt = np.full(len(prev) * f, -1, dtype=np.int64)
+            val = np.zeros(len(prev) * f, dtype=bool)
+            for i, (v, ok) in enumerate(zip(prev, prev_valid)):
+                if not ok:
+                    continue
+                nbrs = self._neighbors(int(v))
+                d = len(nbrs)
+                if d == 0:
+                    continue
+                if d >= f:
+                    pick = self._rng.choice(nbrs, size=f, replace=False)
+                    nxt[i * f : (i + 1) * f] = pick
+                    val[i * f : (i + 1) * f] = True
+                else:
+                    nxt[i * f : i * f + d] = nbrs
+                    val[i * f : i * f + d] = True
+            layer_nodes.append(nxt)
+            layer_valid.append(val)
+        return SampledBlock(seeds=seeds, layer_nodes=layer_nodes,
+                            layer_valid=layer_valid, fanouts=self.fanouts)
+
+    def sample_batches(self, batch_nodes: int, n_batches: int):
+        """Yield blocks over random seed batches (training epochs)."""
+        n = self.n_vertices
+        for _ in range(n_batches):
+            seeds = self._rng.integers(0, n, batch_nodes)
+            yield self.sample(seeds)

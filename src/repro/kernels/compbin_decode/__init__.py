@@ -1,0 +1,2 @@
+from repro.kernels.compbin_decode.ops import compbin_decode  # noqa: F401
+from repro.kernels.compbin_decode.ref import compbin_decode_ref  # noqa: F401

@@ -1,0 +1,50 @@
+"""jit'd public wrapper for the CompBin decode kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.compbin_decode.kernel import compbin_decode_planar
+from repro.kernels.compbin_decode.ref import compbin_decode_ref
+from repro.kernels.utils import ceil_div, interpret_default
+
+
+@functools.partial(jax.jit, static_argnames=("b", "n", "block_rows", "interpret"))
+def _decode_impl(packed: jnp.ndarray, b: int, n: int, block_rows: int,
+                 interpret: bool) -> jnp.ndarray:
+    # Stage to the planar layout the kernel wants: (rows, 128*b) where
+    # plane i holds byte i of each ID.  rows = padded_n / 128.
+    lanes = 128
+    rows = ceil_div(n, lanes)
+    rows_p = ceil_div(rows, block_rows) * block_rows
+    n_pad = rows_p * lanes
+    flat = packed.reshape(-1)
+    flat = jnp.pad(flat, (0, n_pad * b - flat.shape[0]))
+    # (n_pad, b) -> (rows, lanes, b) -> (rows, b, lanes) -> (rows, b*lanes)
+    planar = (
+        flat.reshape(rows_p, lanes, b).transpose(0, 2, 1).reshape(rows_p, b * lanes)
+    )
+    out = compbin_decode_planar(planar, b=b, block_rows=block_rows,
+                                interpret=interpret)
+    return out.reshape(-1)[:n]
+
+
+def compbin_decode(packed: jnp.ndarray, b: int, *, block_rows: int = 256,
+                   interpret: bool | None = None,
+                   use_kernel: bool = True) -> jnp.ndarray:
+    """Decode CompBin-packed vertex IDs on device.
+
+    packed: uint8[n*b] (or any shape with n*b elements, little-endian bytes
+    per ID in memory order).  Returns int32[n].
+    """
+    if not 1 <= b <= 4:
+        raise ValueError(f"b must be in [1,4] for device decode, got {b}")
+    n = packed.size // b
+    if not use_kernel:
+        return compbin_decode_ref(packed.reshape(-1), b)
+    if interpret is None:
+        interpret = interpret_default()
+    return _decode_impl(packed.reshape(-1), b, n, block_rows, interpret)

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the CompBin decode kernel — eq. (1) of the paper."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def compbin_decode_ref(packed: jnp.ndarray, b: int) -> jnp.ndarray:
+    """Decode little-endian ``b``-byte packed vertex IDs.
+
+    packed: uint8[n * b] (flat) or uint8[n, b].
+    returns int32[n] (b <= 4 supported on-device; IDs must fit in int32,
+    i.e. |V| < 2^31 — the dry-run checks this per architecture).
+    """
+    if not 1 <= b <= 4:
+        raise ValueError(f"device decode supports b in [1,4], got {b}")
+    cols = packed.reshape(-1, b).astype(jnp.int32)
+    acc = jnp.zeros(cols.shape[0], jnp.int32)
+    for i in range(b):  # eq. (1): sum(byte_i << 8i)
+        acc = acc | (cols[:, i] << (8 * i))
+    return acc

@@ -1,0 +1,44 @@
+"""jit'd public wrapper for the blocked GQA flash-attention kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_blocked
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.utils import interpret_default, pad_to_multiple
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, scale: float | None = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool | None = None,
+                    use_kernel: bool = True) -> jnp.ndarray:
+    """Blocked causal GQA attention.
+
+    q: [B, Hq, Sq, Dh]; k, v: [B, Hkv, Skv, Dh].  Returns [B, Hq, Sq, Dh]
+    with q's dtype.  Sequences are padded to the block size internally; the
+    causal mask uses the decode convention (last query sees the full KV).
+    """
+    B, Hq, Sq, Dh = q.shape
+    _, Hkv, Skv, _ = k.shape
+    if scale is None:
+        scale = Dh ** -0.5
+    if not use_kernel:
+        return attention_ref(q, k, v, causal=causal, scale=scale).astype(q.dtype)
+    if interpret is None:
+        interpret = interpret_default()
+
+    bq = min(block_q, max(8, Sq))
+    bk = min(block_k, max(8, Skv))
+    qp = pad_to_multiple(q.reshape(B * Hq, Sq, Dh), bq, axis=1)
+    kp = pad_to_multiple(k.reshape(B * Hkv, Skv, Dh), bk, axis=1)
+    vp = pad_to_multiple(v.reshape(B * Hkv, Skv, Dh), bk, axis=1)
+    sq_p = qp.shape[1]
+    # The kernel masks KV padding columns (kpos >= Skv) for every query and
+    # aligns causality with the unpadded offset Skv - Sq.
+    out = flash_attention_blocked(
+        qp, kp, vp, causal=causal, scale=scale, block_q=bq, block_k=bk,
+        offset=Skv - Sq, kv_len=Skv, interpret=interpret)
+    out = out.reshape(B, Hq, sq_p, Dh)[:, :, :Sq]
+    return out.astype(q.dtype)

@@ -1,0 +1,67 @@
+"""Pallas TPU kernel: blocked segment-sum (GNN message aggregation).
+
+The GNN SpMM regime (kernel taxonomy §GNN): messages laid out per edge,
+reduced by destination vertex.  GPUs do this with atomics-based
+scatter-add; the TPU has no HBM atomics, so the TPU-idiomatic realization
+is a **one-hot matmul on the MXU**: a (block_e, N) one-hot of the segment
+ids right-multiplied into the (block_e, block_d) message tile yields the
+(N, block_d) partial sums.  The grid walks edge blocks in the minormost
+dimension; because the TPU grid executes *sequentially*, the output tile
+(N, block_d) can be revisited and accumulated in VMEM across edge blocks —
+a reduction pattern with zero inter-step collectives.
+
+FLOP overhead vs. a scatter: factor N/1 per message, but they are MXU FLOPs
+at ~100x the VPU scatter throughput and the edge tile is read exactly once
+from HBM — for N up to a few thousand (molecule/minibatch regimes) the
+one-hot matmul wins.  ops.py falls back to ``jax.ops.segment_sum`` (XLA's
+sorted-scatter) above ``max_kernel_segments``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _segsum_kernel(ids_ref, msg_ref, out_ref, *, num_segments: int):
+    e_idx = pl.program_id(1)
+
+    @pl.when(e_idx == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    ids = ids_ref[...]  # int32[block_e]
+    msgs = msg_ref[...]  # f32[block_e, block_d]
+    seg = jax.lax.broadcasted_iota(jnp.int32, (ids.shape[0], num_segments), 1)
+    onehot = (ids[:, None] == seg).astype(msgs.dtype)  # [block_e, N]
+    # (N, block_e) @ (block_e, block_d) on the MXU, f32 accumulation
+    out_ref[...] += jax.lax.dot_general(
+        onehot, msgs, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("num_segments", "block_e",
+                                             "block_d", "interpret"))
+def segment_sum_blocked(messages: jnp.ndarray, segment_ids: jnp.ndarray,
+                        *, num_segments: int, block_e: int = 512,
+                        block_d: int = 128, interpret: bool = True) -> jnp.ndarray:
+    """messages: f32[E, D] (E % block_e == 0, D % block_d == 0, padded by
+    ops.py with segment_ids == -1 on padding); returns f32[N, D]."""
+    E, D = messages.shape
+    assert E % block_e == 0 and D % block_d == 0, (E, D, block_e, block_d)
+    grid = (D // block_d, E // block_e)  # edge blocks minormost => sequential accum
+    return pl.pallas_call(
+        functools.partial(_segsum_kernel, num_segments=num_segments),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_e,), lambda d, e: (e,)),
+            pl.BlockSpec((block_e, block_d), lambda d, e: (e, d)),
+        ],
+        out_specs=pl.BlockSpec((num_segments, block_d), lambda d, e: (0, d)),
+        out_shape=jax.ShapeDtypeStruct((num_segments, D), jnp.float32),
+        interpret=interpret,
+    )(segment_ids, messages)

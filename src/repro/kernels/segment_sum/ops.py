@@ -1,0 +1,43 @@
+"""jit'd public wrapper for the blocked segment-sum kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.segment_sum.kernel import segment_sum_blocked
+from repro.kernels.segment_sum.ref import segment_sum_ref
+from repro.kernels.utils import ceil_div, interpret_default, pad_to_multiple
+
+# Above this the (N, block_d) output tile no longer fits VMEM comfortably;
+# fall back to XLA's sorted scatter (jax.ops.segment_sum).
+MAX_KERNEL_SEGMENTS = 8192
+
+
+def segment_sum(messages: jnp.ndarray, segment_ids: jnp.ndarray,
+                num_segments: int, *, block_e: int = 512, block_d: int = 128,
+                interpret: bool | None = None,
+                use_kernel: bool = True) -> jnp.ndarray:
+    """Segment-sum messages[E, D] by segment_ids[E] into [num_segments, D].
+
+    Padding edges may carry ``segment_ids == -1`` (dropped).  Kernel path is
+    used for ``num_segments <= MAX_KERNEL_SEGMENTS``; otherwise XLA scatter.
+    """
+    if messages.ndim != 2 or segment_ids.ndim != 1:
+        raise ValueError("messages must be [E, D], segment_ids [E]")
+    if messages.shape[0] != segment_ids.shape[0]:
+        raise ValueError("E mismatch between messages and segment_ids")
+    if not use_kernel or num_segments > MAX_KERNEL_SEGMENTS:
+        return segment_sum_ref(messages, segment_ids, num_segments)
+    if interpret is None:
+        interpret = interpret_default()
+    E, D = messages.shape
+    block_e = min(block_e, max(8, 1 << (E - 1).bit_length())) if E else block_e
+    block_d = min(block_d, max(128, D))
+    msgs = pad_to_multiple(messages.astype(jnp.float32), block_e, axis=0)
+    msgs = pad_to_multiple(msgs, block_d, axis=1)
+    ids = pad_to_multiple(segment_ids.astype(jnp.int32), block_e, axis=0, value=-1)
+    out = segment_sum_blocked(
+        msgs, ids, num_segments=num_segments, block_e=block_e,
+        block_d=min(block_d, msgs.shape[1]), interpret=interpret,
+    )
+    return out[:, :D]

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the blocked segment-sum kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def segment_sum_ref(messages: jnp.ndarray, segment_ids: jnp.ndarray,
+                    num_segments: int) -> jnp.ndarray:
+    """sum messages[e] into out[segment_ids[e]]; ids < 0 are dropped.
+
+    messages: float[E, D]; segment_ids: int32[E]; returns float32[N, D].
+    """
+    valid = segment_ids >= 0
+    ids = jnp.where(valid, segment_ids, 0)
+    msgs = jnp.where(valid[:, None], messages, 0).astype(jnp.float32)
+    return jax.ops.segment_sum(msgs, ids, num_segments=num_segments)

@@ -1,0 +1,37 @@
+"""Shared helpers for the Pallas TPU kernels."""
+
+from __future__ import annotations
+
+import os
+
+import jax.numpy as jnp
+
+
+def ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def pad_to_multiple(x, multiple: int, axis: int, value=0):
+    """Pad ``x`` along ``axis`` up to the next multiple of ``multiple``."""
+    n = x.shape[axis]
+    target = ceil_div(n, multiple) * multiple
+    if target == n:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, target - n)
+    return jnp.pad(x, pads, constant_values=value)
+
+
+def interpret_default() -> bool:
+    """Kernels run in interpret mode unless a real TPU backend is present.
+
+    The container is CPU-only; ``interpret=True`` executes the kernel body in
+    Python for correctness validation, while the same ``pallas_call`` lowers
+    to Mosaic on a real TPU.  Override with REPRO_PALLAS_INTERPRET=0/1.
+    """
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    import jax
+
+    return jax.default_backend() != "tpu"

@@ -1,0 +1,106 @@
+"""Convert sampled blocks / generated graphs into model batch dicts."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.csr import CSR
+from repro.graph.sampler import SampledBlock
+
+
+def block_to_edges(block: SampledBlock) -> tuple[np.ndarray, np.ndarray, int]:
+    """Padded tree block -> (edge_src, edge_dst) local indices + n_nodes.
+
+    Layer l slot i's children occupy slots [i*f, (i+1)*f) of layer l+1;
+    edges point child -> parent (message flows to the seed side).
+    """
+    offsets = np.cumsum([0] + [len(x) for x in block.layer_nodes])
+    srcs, dsts = [], []
+    for l, f in enumerate(block.fanouts):
+        n_par = len(block.layer_nodes[l])
+        child_base = offsets[l + 1]
+        par_base = offsets[l]
+        child_idx = child_base + np.arange(n_par * f)
+        par_idx = par_base + np.repeat(np.arange(n_par), f)
+        valid = block.layer_valid[l + 1]
+        srcs.append(np.where(valid, child_idx, -1))
+        dsts.append(np.where(valid, par_idx, -1))
+    return (np.concatenate(srcs), np.concatenate(dsts), int(offsets[-1]))
+
+
+def block_features(block: SampledBlock, d_feat: int, rng) -> np.ndarray:
+    """Feature matrix for all block nodes (hashed-random stand-in: real
+    deployments gather rows from the feature store through PG-Fuse)."""
+    nodes = np.concatenate(block.layer_nodes)
+    feats = rng.standard_normal((len(nodes), d_feat)).astype(np.float32)
+    return np.where((nodes >= 0)[:, None], feats, 0)
+
+
+def block_to_batch(arch_id: str, cfg, block: SampledBlock, rng) -> dict:
+    import jax.numpy as jnp
+
+    src, dst, n = block_to_edges(block)
+    d_in = getattr(cfg, "d_in", getattr(cfg, "d_node_in", 16))
+    x = block_features(block, d_in, rng)
+    batch = {
+        "x": jnp.asarray(x),
+        "edge_src": jnp.asarray(src.astype(np.int32)),
+        "edge_dst": jnp.asarray(dst.astype(np.int32)),
+    }
+    n_seeds = len(block.seeds)
+    if arch_id in ("gcn-cora", "pna"):
+        n_classes = cfg.n_classes
+        labels = np.full(n, -1, np.int64)
+        labels[:n_seeds] = rng.integers(0, n_classes, n_seeds)
+        mask = np.zeros(n, bool)
+        mask[:n_seeds] = True
+        batch["labels"] = jnp.asarray(labels)
+        batch["label_mask"] = jnp.asarray(mask)
+    elif arch_id == "meshgraphnet":
+        batch["edge_attr"] = jnp.asarray(
+            rng.standard_normal((len(src), cfg.d_edge_in)).astype(np.float32))
+        batch["targets"] = jnp.asarray(
+            rng.standard_normal((n, cfg.d_out)).astype(np.float32))
+        batch["node_mask"] = jnp.asarray(np.arange(n) < n_seeds)
+    elif arch_id == "dimenet":
+        batch["pos"] = jnp.asarray(rng.standard_normal((n, 3)).astype(np.float32))
+        E = len(src)
+        T = 2 * E
+        batch["triplet_kj"] = jnp.asarray(rng.integers(0, E, T).astype(np.int32))
+        batch["triplet_ji"] = jnp.asarray(rng.integers(0, E, T).astype(np.int32))
+        batch["graph_id"] = jnp.asarray(np.zeros(n, np.int32))
+        batch["targets"] = jnp.asarray(rng.standard_normal((1, 1)).astype(np.float32))
+        batch["n_graphs"] = 1
+    return batch
+
+
+def full_graph_batch(arch_id: str, cfg, csr: CSR, rng, *,
+                     n_classes: int = 7) -> dict:
+    """Full-batch training dict from an in-memory CSR."""
+    import jax.numpy as jnp
+
+    src, dst = csr.edge_index()
+    n = csr.n_vertices
+    d_in = getattr(cfg, "d_in", getattr(cfg, "d_node_in", 16))
+    batch = {
+        "x": jnp.asarray(rng.standard_normal((n, d_in)).astype(np.float32)),
+        "edge_src": jnp.asarray(src.astype(np.int32)),
+        "edge_dst": jnp.asarray(dst.astype(np.int32)),
+    }
+    if arch_id in ("gcn-cora", "pna"):
+        batch["labels"] = jnp.asarray(rng.integers(0, n_classes, n))
+        batch["label_mask"] = jnp.asarray(rng.random(n) < 0.3)
+    elif arch_id == "meshgraphnet":
+        batch["edge_attr"] = jnp.asarray(
+            rng.standard_normal((len(src), cfg.d_edge_in)).astype(np.float32))
+        batch["targets"] = jnp.asarray(
+            rng.standard_normal((n, cfg.d_out)).astype(np.float32))
+    elif arch_id == "dimenet":
+        E = len(src)
+        batch["pos"] = jnp.asarray(rng.standard_normal((n, 3)).astype(np.float32))
+        batch["triplet_kj"] = jnp.asarray(rng.integers(0, E, 2 * E).astype(np.int32))
+        batch["triplet_ji"] = jnp.asarray(rng.integers(0, E, 2 * E).astype(np.int32))
+        batch["graph_id"] = jnp.asarray(np.zeros(n, np.int32))
+        batch["targets"] = jnp.asarray(rng.standard_normal((1, 1)).astype(np.float32))
+        batch["n_graphs"] = 1
+    return batch

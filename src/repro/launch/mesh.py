@@ -1,0 +1,22 @@
+"""Production mesh definition.
+
+A function (not a module-level constant) so importing never touches jax
+device state: the dry-run sets XLA_FLAGS *before* the first jax call.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(n_devices: int | None = None, *, model: int = 1):
+    """Small CPU mesh for tests/examples (data x model over local devices)."""
+    n = n_devices or len(jax.devices())
+    return jax.make_mesh((n // model, model), ("data", "model"))

@@ -1,0 +1,315 @@
+"""Cell builder: (arch x shape x mesh) -> jittable step + shardings + specs.
+
+This is the single source of truth used by the dry-run, the trainers and
+the benchmarks, so what we lower in the 512-device dry-run is exactly what
+``train.py``/``serve.py`` execute.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_arch
+from repro.configs.shapes import (GNN_SHAPES, LM_SHAPES, RECSYS_SHAPES,
+                                  din_input_specs, gnn_input_specs,
+                                  lm_input_specs)
+from repro.distributed import sharding as shard_rules
+from repro.launch import model_flops as mf
+from repro.models import transformer as tf
+from repro.models.gnn import dimenet as m_dimenet
+from repro.models.gnn import gcn as m_gcn
+from repro.models.gnn import meshgraphnet as m_mgn
+from repro.models.gnn import pna as m_pna
+from repro.models.recsys import din as m_din
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+
+@dataclasses.dataclass
+class Cell:
+    arch_id: str
+    shape_id: str
+    kind: str                      # train | prefill | decode | serve | retrieval
+    fn: Optional[Callable]         # fn(*args)
+    args: Optional[tuple]          # ShapeDtypeStruct pytrees
+    in_shardings: Optional[tuple]
+    out_shardings: Any
+    model_flops: float
+    skip_reason: Optional[str] = None
+    donate: tuple = ()
+
+
+def _named(mesh: Mesh, tree: Any) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _replicated_specs(tree_like: Any) -> Any:
+    return jax.tree.map(lambda x: P(*([None] * len(x.shape))), tree_like)
+
+
+def _abstract(fn: Callable, *args) -> Any:
+    return jax.eval_shape(fn, *args)
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+
+def _lm_cell(arch_id: str, shape_id: str, mesh: Mesh, *,
+             opt_cfg: Optional[AdamWConfig] = None,
+             cfg_overrides: Optional[dict] = None,
+             unroll: bool = True) -> Cell:
+    spec = get_arch(arch_id)
+    shape = LM_SHAPES[shape_id]
+    cfg = spec.make_config()
+    # Dry-run defaults: unrolled execution for exact HLO cost accounting
+    # (XLA counts while-loop bodies once — see TransformerConfig docstring)
+    # + per-shape attention chunk sizes keeping one tile ~VMEM-friendly.
+    # The multi-pod compile-proof pass uses scan (fast compile; the
+    # roofline table is single-pod only).
+    defaults: dict = {"unroll_layers": unroll, "attn_unroll": unroll}
+    if shape.kind == "train":
+        defaults["attn_chunk"] = 2048
+    elif shape.kind == "prefill":
+        defaults["attn_chunk"] = 8192
+    m_size = shard_rules.axis_size(mesh, "model")
+    defaults["attn_head_axis"] = "model"
+    defaults["batch_axes"] = tuple(shard_rules.batch_axes(mesh))
+    if cfg.n_kv_heads % m_size != 0:
+        defaults["attn_kv_expand"] = True
+    overrides = {**defaults, **(cfg_overrides or {})}
+    if cfg.moe and "moe_ep_axis" not in overrides:
+        overrides["moe_ep_axis"] = "model"
+    cfg = dataclasses.replace(cfg, **overrides)
+    if shape.skip_reason:
+        return Cell(arch_id, shape_id, shape.kind, None, None, None, None,
+                    0.0, skip_reason=shape.skip_reason)
+
+    flops = mf.lm_model_flops(cfg, shape)
+    params_shape = _abstract(lambda k: tf.init_params(cfg, k), jax.random.key(0))
+    p_specs = shard_rules.lm_param_specs(cfg, mesh)
+    batch_spec = shard_rules.lm_batch_spec(mesh)
+    inputs = lm_input_specs(shape, cfg)
+
+    if shape.kind == "train":
+        opt_cfg = opt_cfg or AdamWConfig()
+        opt_shape = _abstract(lambda p: adamw_init(p, opt_cfg), params_shape)
+        o_specs = shard_rules.zero_opt_specs(params_shape, p_specs, mesh)
+
+        def train_step(state, batch):
+            def loss(p):
+                return tf.loss_fn(p, batch["tokens"], batch["labels"], cfg)
+            l, g = jax.value_and_grad(loss)(state["params"])
+            params, opt, met = adamw_update(state["params"], g, state["opt"],
+                                            opt_cfg)
+            return ({"params": params, "opt": opt}, {**met, "loss": l})
+
+        state_shape = {"params": params_shape, "opt": opt_shape}
+        state_specs = {"params": p_specs, "opt": o_specs}
+        batch_specs = {k: batch_spec for k in inputs}
+        met_specs = {"grad_norm": P(), "lr": P(), "loss": P()}
+        return Cell(arch_id, shape_id, "train", train_step,
+                    (state_shape, inputs),
+                    (_named(mesh, state_specs), _named(mesh, batch_specs)),
+                    (_named(mesh, state_specs), _named(mesh, met_specs)),
+                    flops, donate=(0,))
+
+    if shape.kind == "prefill":
+        def prefill_fn(params, batch):
+            logits, cache = tf.prefill(params, batch["tokens"], cfg)
+            return logits, cache["k"], cache["v"]
+
+        cache_specs = shard_rules.lm_cache_specs(cfg, mesh, shape.global_batch)
+        out_specs = (P(shard_rules.batch_axes(mesh), None),
+                     cache_specs["k"], cache_specs["v"])
+        in_specs = ({k: batch_spec for k in inputs})
+        return Cell(arch_id, shape_id, "prefill", prefill_fn,
+                    (params_shape, inputs),
+                    (_named(mesh, p_specs), _named(mesh, in_specs)),
+                    _named(mesh, out_specs), flops)
+
+    # decode
+    def decode_fn(params, batch):
+        cache = {"k": batch["cache_k"], "v": batch["cache_v"],
+                 "len": batch["cache_len"]}
+        logits, cache = tf.decode_step(params, batch["tokens"], cache, cfg)
+        return logits, cache["k"], cache["v"]
+
+    cache_specs = shard_rules.lm_cache_specs(cfg, mesh, shape.global_batch)
+    in_batch_specs = {
+        "tokens": batch_spec,
+        "cache_k": cache_specs["k"], "cache_v": cache_specs["v"],
+        "cache_len": P(),
+    }
+    out_specs = (P(shard_rules.batch_axes(mesh), None),
+                 cache_specs["k"], cache_specs["v"])
+    return Cell(arch_id, shape_id, "decode", decode_fn,
+                (params_shape, inputs),
+                (_named(mesh, p_specs), _named(mesh, in_batch_specs)),
+                _named(mesh, out_specs), flops, donate=(1,))
+
+
+# ---------------------------------------------------------------------------
+# GNN cells
+# ---------------------------------------------------------------------------
+
+_GNN_MODULES = {
+    "gcn-cora": m_gcn, "pna": m_pna, "dimenet": m_dimenet,
+    "meshgraphnet": m_mgn,
+}
+
+
+def _gnn_config(arch_id: str, shape) -> Any:
+    spec = get_arch(arch_id)
+    if arch_id == "gcn-cora":
+        return spec.make_config(d_in=shape.d_feat, n_classes=shape.n_classes)
+    if arch_id == "pna":
+        return spec.make_config(d_in=shape.d_feat, n_classes=shape.n_classes)
+    if arch_id == "dimenet":
+        return spec.make_config(d_in=shape.d_feat)
+    if arch_id == "meshgraphnet":
+        return spec.make_config(d_node_in=shape.d_feat)
+    raise KeyError(arch_id)
+
+
+def _gnn_cell(arch_id: str, shape_id: str, mesh: Mesh, *,
+              opt_cfg: Optional[AdamWConfig] = None,
+              edges_packed: bool = False,
+              gnn_cfg_overrides: Optional[dict] = None) -> Cell:
+    shape = GNN_SHAPES[shape_id]
+    mod = _GNN_MODULES[arch_id]
+    cfg = _gnn_config(arch_id, shape)
+    if gnn_cfg_overrides:
+        cfg = dataclasses.replace(cfg, **gnn_cfg_overrides)
+    inputs = gnn_input_specs(shape, arch_id)
+    cb_b = 0
+    if edges_packed:
+        # §Perf variant: the edge index arrives CompBin-packed (paper
+        # eq. (1): b = ceil(log2 |V|/8) bytes/ID) and is decoded on device
+        # right before the gather — (4-b)/4 less HBM traffic for the
+        # hottest input of the SpMM regime.
+        from repro.core.compbin import bytes_per_vertex
+        cb_b = bytes_per_vertex(shape.n_nodes)
+        E = inputs["edge_src"].shape[0]
+        packed = jax.ShapeDtypeStruct((E * cb_b,), jnp.uint8)
+        inputs = dict(inputs, edge_src=packed, edge_dst=packed)
+    flops = mf.gnn_model_flops(arch_id, cfg, shape)
+
+    params_shape = _abstract(lambda k: mod.init_params(cfg, k), jax.random.key(0))
+    p_specs = _replicated_specs(params_shape)
+    b_specs = shard_rules.gnn_specs(mesh, inputs)
+    # static scalar entries (n_graphs) are not arrays — keep them python-side
+    static = {k: v for k, v in inputs.items() if not hasattr(v, "shape")}
+
+    opt_cfg = opt_cfg or AdamWConfig()
+    opt_shape = _abstract(lambda p: adamw_init(p, opt_cfg), params_shape)
+    o_specs = shard_rules.zero_opt_specs(params_shape, p_specs, mesh)
+
+    loss_with_static = functools.partial(_gnn_loss, mod=mod, cfg=cfg,
+                                         static=dict(static, n_graphs=shape.n_graphs),
+                                         cb_b=cb_b)
+
+    def train_step(state, batch):
+        l, g = jax.value_and_grad(loss_with_static)(state["params"], batch)
+        params, opt, met = adamw_update(state["params"], g, state["opt"], opt_cfg)
+        return ({"params": params, "opt": opt}, {**met, "loss": l})
+
+    arr_inputs = {k: v for k, v in inputs.items() if hasattr(v, "shape")}
+    state_shape = {"params": params_shape, "opt": opt_shape}
+    state_specs = {"params": p_specs, "opt": o_specs}
+    met_specs = {"grad_norm": P(), "lr": P(), "loss": P()}
+    return Cell(arch_id, shape_id, "train", train_step,
+                (state_shape, arr_inputs),
+                (_named(mesh, state_specs), _named(mesh, b_specs)),
+                (_named(mesh, state_specs), _named(mesh, met_specs)),
+                flops, donate=(0,))
+
+
+def _gnn_loss(params, batch, *, mod, cfg, static, cb_b=0):
+    full = dict(batch)
+    if cb_b:
+        # decode the packed edge index (eq. 1: shifts+adds) on device;
+        # padding slots decode to id (2^8b - 1) -> mapped back to -1
+        from repro.kernels.compbin_decode.ref import compbin_decode_ref
+        for key in ("edge_src", "edge_dst"):
+            ids = compbin_decode_ref(full[key], cb_b)
+            full[key] = jnp.where(ids == (1 << (8 * cb_b)) - 1, -1, ids)
+    full.update(static)
+    return mod.loss_fn(params, full, cfg)
+
+
+# ---------------------------------------------------------------------------
+# Recsys (DIN) cells
+# ---------------------------------------------------------------------------
+
+def _din_cell(arch_id: str, shape_id: str, mesh: Mesh, *,
+              opt_cfg: Optional[AdamWConfig] = None) -> Cell:
+    spec = get_arch(arch_id)
+    shape = RECSYS_SHAPES[shape_id]
+    cfg = spec.make_config()
+    inputs = din_input_specs(shape, cfg)
+    flops = mf.din_model_flops(cfg, shape)
+    params_shape = _abstract(lambda k: m_din.init_params(cfg, k), jax.random.key(0))
+    p_specs = shard_rules.din_specs(params_shape, mesh)
+    b_specs = shard_rules.din_batch_specs(mesh, inputs)
+
+    if shape.kind == "train":
+        opt_cfg = opt_cfg or AdamWConfig()
+        opt_shape = _abstract(lambda p: adamw_init(p, opt_cfg), params_shape)
+        o_specs = shard_rules.zero_opt_specs(params_shape, p_specs, mesh)
+
+        def train_step(state, batch):
+            l, g = jax.value_and_grad(
+                lambda p: m_din.loss_fn(p, batch, cfg))(state["params"])
+            params, opt, met = adamw_update(state["params"], g, state["opt"],
+                                            opt_cfg)
+            return ({"params": params, "opt": opt}, {**met, "loss": l})
+
+        state_shape = {"params": params_shape, "opt": opt_shape}
+        state_specs = {"params": p_specs, "opt": o_specs}
+        met_specs = {"grad_norm": P(), "lr": P(), "loss": P()}
+        return Cell(arch_id, shape_id, "train", train_step,
+                    (state_shape, inputs),
+                    (_named(mesh, state_specs), _named(mesh, b_specs)),
+                    (_named(mesh, state_specs), _named(mesh, met_specs)),
+                    flops, donate=(0,))
+
+    if shape.kind == "retrieval":
+        def retrieve(params, batch):
+            return m_din.score_candidates(params, batch, cfg)
+
+        out_spec = P(tuple(mesh.axis_names))
+        return Cell(arch_id, shape_id, "retrieval", retrieve,
+                    (params_shape, inputs),
+                    (_named(mesh, p_specs), _named(mesh, b_specs)),
+                    NamedSharding(mesh, out_spec), flops)
+
+    def serve(params, batch):
+        return m_din.forward(params, batch, cfg)
+
+    out_spec = P(shard_rules.batch_axes(mesh))
+    return Cell(arch_id, shape_id, "serve", serve,
+                (params_shape, inputs),
+                (_named(mesh, p_specs), _named(mesh, b_specs)),
+                NamedSharding(mesh, out_spec), flops)
+
+
+# ---------------------------------------------------------------------------
+# public entry
+# ---------------------------------------------------------------------------
+
+def build_cell(arch_id: str, shape_id: str, mesh: Mesh, **kw) -> Cell:
+    family = get_arch(arch_id).family
+    if family == "lm":
+        return _lm_cell(arch_id, shape_id, mesh, **kw)
+    kw.pop("unroll", None)  # GNN/recsys models have no scan anywhere
+    if family == "gnn":
+        return _gnn_cell(arch_id, shape_id, mesh, **kw)
+    return _din_cell(arch_id, shape_id, mesh, **kw)

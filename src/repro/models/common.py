@@ -1,0 +1,77 @@
+"""Shared model building blocks (pure functional JAX — no flax)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * scale.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray | None,
+               eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    return y.astype(dt)
+
+
+def dense_init(key, shape, scale: float | None = None, dtype=jnp.float32):
+    """Truncated-normal fan-in init."""
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.truncated_normal(key, -2, 2, shape, jnp.float32) * std
+            ).astype(dtype)
+
+
+def mlp(params_prefix: dict, x: jnp.ndarray, names: list[str],
+        act=jax.nn.relu, final_act=None) -> jnp.ndarray:
+    """Apply a stack of dense layers ``names`` from a params dict holding
+    ``{name}_w`` / ``{name}_b``."""
+    for i, n in enumerate(names):
+        x = x @ params_prefix[f"{n}_w"] + params_prefix[f"{n}_b"]
+        if i < len(names) - 1:
+            x = act(x)
+        elif final_act is not None:
+            x = final_act(x)
+    return x
+
+
+def init_mlp(key, sizes: list[int], names: list[str], dtype=jnp.float32) -> dict:
+    assert len(sizes) == len(names) + 1
+    out = {}
+    for i, n in enumerate(names):
+        key, k1 = jax.random.split(key)
+        out[f"{n}_w"] = dense_init(k1, (sizes[i], sizes[i + 1]), dtype=dtype)
+        out[f"{n}_b"] = jnp.zeros((sizes[i + 1],), dtype)
+    return out
+
+
+def cross_entropy_loss(logits: jnp.ndarray, labels: jnp.ndarray,
+                       ignore: int = -100) -> jnp.ndarray:
+    """Mean token CE in f32; ``labels == ignore`` positions are masked.
+
+    The gold logit is extracted with a fused mask-reduce (iota == label)
+    rather than ``take_along_axis`` so a vocab-sharded logits tensor never
+    gets all-gathered: both the logsumexp and the masked sum are plain
+    reductions over the sharded vocab axis, which GSPMD turns into local
+    reductions + a scalar psum."""
+    logits = logits.astype(jnp.float32)
+    valid = labels != ignore
+    labels_safe = jnp.where(valid, labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    vocab_iota = jax.lax.broadcasted_iota(labels.dtype, logits.shape,
+                                          logits.ndim - 1)
+    gold = jnp.sum(jnp.where(vocab_iota == labels_safe[..., None], logits, 0),
+                   axis=-1)
+    nll = (logz - gold) * valid
+    return nll.sum() / jnp.maximum(valid.sum(), 1)

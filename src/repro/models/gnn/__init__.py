@@ -1,0 +1,1 @@
+from repro.models.gnn import dimenet, gcn, meshgraphnet, pna  # noqa: F401

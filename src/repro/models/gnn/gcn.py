@@ -1,0 +1,75 @@
+"""GCN [Kipf & Welling, arXiv:1609.02907] — gcn-cora config:
+n_layers=2, d_hidden=16, mean/sym-normalized aggregation.
+
+SpMM regime:  H' = sigma( D^-1/2 (A+I) D^-1/2 H W )  realized as
+gather(src) -> per-edge scale -> segment-sum -> dense W.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import cross_entropy_loss, dense_init
+from repro.models.gnn import layers as L
+
+
+@dataclasses.dataclass(frozen=True)
+class GCNConfig:
+    name: str = "gcn-cora"
+    n_layers: int = 2
+    d_hidden: int = 16
+    d_in: int = 1433
+    n_classes: int = 7
+    norm: str = "sym"       # "sym" | "mean"
+    dtype: type = jnp.float32
+    # A(XW) instead of (AX)W when d_out < d_in: same math (both are
+    # linear), but the gathered/scattered messages shrink from d_in-wide
+    # to d_out-wide — for ogb_products (100 -> 16) an ~6x cut in the
+    # SpMM gather/scatter traffic (EXPERIMENTS.md §Perf).
+    transform_first: bool = False
+
+
+def init_params(cfg: GCNConfig, key: jax.Array) -> dict:
+    params = {}
+    dims = [cfg.d_in] + [cfg.d_hidden] * (cfg.n_layers - 1) + [cfg.n_classes]
+    for i in range(cfg.n_layers):
+        key, k = jax.random.split(key)
+        params[f"w{i}"] = dense_init(k, (dims[i], dims[i + 1]), dtype=cfg.dtype)
+        params[f"b{i}"] = jnp.zeros((dims[i + 1],), cfg.dtype)
+    return params
+
+
+def forward(params: dict, batch: dict, cfg: GCNConfig) -> jnp.ndarray:
+    x = batch["x"].astype(cfg.dtype)
+    src, dst = batch["edge_src"], batch["edge_dst"]
+    n = x.shape[0]
+    deg = L.degree(dst, n) + 1.0  # +1: self loop
+    if cfg.norm == "sym":
+        dn = jax.lax.rsqrt(deg)
+        w_edge = L.gather(dn[:, None], src)[:, 0] * L.gather(dn[:, None], dst)[:, 0]
+        self_w = 1.0 / deg
+    else:
+        w_edge = 1.0 / jnp.maximum(L.gather(deg[:, None], dst)[:, 0], 1)
+        self_w = 1.0 / deg
+    for i in range(cfg.n_layers):
+        if cfg.transform_first and params[f"w{i}"].shape[1] < x.shape[1]:
+            x = x @ params[f"w{i}"]
+            msgs = L.gather(x, src) * w_edge[:, None]
+            x = (L.scatter_sum(msgs, dst, n) + x * self_w[:, None]
+                 + params[f"b{i}"])
+        else:
+            msgs = L.gather(x, src) * w_edge[:, None]
+            agg = L.scatter_sum(msgs, dst, n) + x * self_w[:, None]
+            x = agg @ params[f"w{i}"] + params[f"b{i}"]
+        if i < cfg.n_layers - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+def loss_fn(params: dict, batch: dict, cfg: GCNConfig) -> jnp.ndarray:
+    logits = forward(params, batch, cfg)
+    labels = jnp.where(batch["label_mask"], batch["labels"], -100)
+    return cross_entropy_loss(logits, labels)

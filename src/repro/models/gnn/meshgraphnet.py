@@ -1,0 +1,83 @@
+"""MeshGraphNet [arXiv:2010.03409] — learned mesh-based simulation.
+
+Config: n_layers=15, d_hidden=128, sum aggregation, 2-layer MLPs.
+Encode-Process-Decode: node/edge encoders, 15 graph-net blocks with
+residual edge+node updates, node decoder predicting dynamics targets.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import init_mlp, mlp
+from repro.models.gnn import layers as L
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshGraphNetConfig:
+    name: str = "meshgraphnet"
+    n_layers: int = 15
+    d_hidden: int = 128
+    mlp_layers: int = 2
+    d_node_in: int = 16
+    d_edge_in: int = 8
+    d_out: int = 3            # e.g. acceleration / velocity targets
+    dtype: type = jnp.float32
+
+
+def _mlp_sizes(cfg: MeshGraphNetConfig, d_in: int, d_out: int) -> list[int]:
+    return [d_in] + [cfg.d_hidden] * (cfg.mlp_layers - 1) + [d_out]
+
+
+def _names(cfg: MeshGraphNetConfig) -> list[str]:
+    return [f"l{i}" for i in range(cfg.mlp_layers)]
+
+
+def init_params(cfg: MeshGraphNetConfig, key: jax.Array) -> dict:
+    names = _names(cfg)
+    p: dict = {}
+    key, k1, k2, k3 = jax.random.split(key, 4)
+    p["node_enc"] = init_mlp(k1, _mlp_sizes(cfg, cfg.d_node_in, cfg.d_hidden),
+                             names, cfg.dtype)
+    p["edge_enc"] = init_mlp(k2, _mlp_sizes(cfg, cfg.d_edge_in, cfg.d_hidden),
+                             names, cfg.dtype)
+    p["decoder"] = init_mlp(k3, _mlp_sizes(cfg, cfg.d_hidden, cfg.d_out),
+                            names, cfg.dtype)
+    for i in range(cfg.n_layers):
+        key, k1, k2 = jax.random.split(key, 3)
+        p[f"edge_mlp{i}"] = init_mlp(
+            k1, _mlp_sizes(cfg, 3 * cfg.d_hidden, cfg.d_hidden), names, cfg.dtype)
+        p[f"node_mlp{i}"] = init_mlp(
+            k2, _mlp_sizes(cfg, 2 * cfg.d_hidden, cfg.d_hidden), names, cfg.dtype)
+    return p
+
+
+def forward(params: dict, batch: dict, cfg: MeshGraphNetConfig) -> jnp.ndarray:
+    names = _names(cfg)
+    x = batch["x"].astype(cfg.dtype)
+    e = batch["edge_attr"].astype(cfg.dtype)
+    src, dst = batch["edge_src"], batch["edge_dst"]
+    n = x.shape[0]
+
+    h = mlp(params["node_enc"], x, names, act=jax.nn.relu)
+    he = mlp(params["edge_enc"], e, names, act=jax.nn.relu)
+    for i in range(cfg.n_layers):
+        cat = jnp.concatenate([he, L.gather(h, src), L.gather(h, dst)], axis=-1)
+        he = he + mlp(params[f"edge_mlp{i}"], cat, names, act=jax.nn.relu)
+        agg = L.scatter_sum(he, dst, n)                    # sum aggregator
+        h = h + mlp(params[f"node_mlp{i}"],
+                    jnp.concatenate([h, agg], axis=-1), names, act=jax.nn.relu)
+    return mlp(params["decoder"], h, names, act=jax.nn.relu)
+
+
+def loss_fn(params: dict, batch: dict, cfg: MeshGraphNetConfig) -> jnp.ndarray:
+    pred = forward(params, batch, cfg)
+    err = (pred - batch["targets"].astype(pred.dtype)) ** 2
+    mask = batch.get("node_mask")
+    if mask is not None:
+        err = jnp.where(mask[:, None], err, 0)
+        return err.astype(jnp.float32).sum() / jnp.maximum(mask.sum() * pred.shape[-1], 1)
+    return jnp.mean(err.astype(jnp.float32))

@@ -1,0 +1,78 @@
+"""PNA — Principal Neighbourhood Aggregation [arXiv:2004.05718].
+
+Config: n_layers=4, d_hidden=75, aggregators mean/max/min/std,
+scalers identity/amplification/attenuation.  Multi-aggregator regime:
+4 parallel segment reductions x 3 degree scalers -> 12 concatenated views
+-> linear tower, residual connections.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import cross_entropy_loss, dense_init
+from repro.models.gnn import layers as L
+
+
+@dataclasses.dataclass(frozen=True)
+class PNAConfig:
+    name: str = "pna"
+    n_layers: int = 4
+    d_hidden: int = 75
+    d_in: int = 64
+    n_classes: int = 10
+    avg_log_degree: float = 2.0   # delta: dataset mean of log(deg+1)
+    dtype: type = jnp.float32
+
+
+def init_params(cfg: PNAConfig, key: jax.Array) -> dict:
+    params = {}
+    key, k = jax.random.split(key)
+    params["enc_w"] = dense_init(k, (cfg.d_in, cfg.d_hidden), dtype=cfg.dtype)
+    params["enc_b"] = jnp.zeros((cfg.d_hidden,), cfg.dtype)
+    for i in range(cfg.n_layers):
+        key, k1, k2 = jax.random.split(key, 3)
+        # pre-message MLP on (h_src || h_dst) and post-aggregation tower
+        params[f"msg_w{i}"] = dense_init(k1, (2 * cfg.d_hidden, cfg.d_hidden),
+                                         dtype=cfg.dtype)
+        params[f"msg_b{i}"] = jnp.zeros((cfg.d_hidden,), cfg.dtype)
+        params[f"tower_w{i}"] = dense_init(
+            k2, ((12 + 1) * cfg.d_hidden, cfg.d_hidden), dtype=cfg.dtype)
+        params[f"tower_b{i}"] = jnp.zeros((cfg.d_hidden,), cfg.dtype)
+    key, k = jax.random.split(key)
+    params["head_w"] = dense_init(k, (cfg.d_hidden, cfg.n_classes), dtype=cfg.dtype)
+    params["head_b"] = jnp.zeros((cfg.n_classes,), cfg.dtype)
+    return params
+
+
+def forward(params: dict, batch: dict, cfg: PNAConfig) -> jnp.ndarray:
+    x = batch["x"].astype(cfg.dtype)
+    src, dst = batch["edge_src"], batch["edge_dst"]
+    n = x.shape[0]
+    deg = L.degree(dst, n)
+    # scalers (PNA eq. 5): identity, amplification, attenuation
+    logd = jnp.log(deg + 1.0)
+    amp = (logd / cfg.avg_log_degree)[:, None]
+    att = (cfg.avg_log_degree / jnp.maximum(logd, 1e-2))[:, None]
+
+    x = x @ params["enc_w"] + params["enc_b"]
+    for i in range(cfg.n_layers):
+        m_in = jnp.concatenate([L.gather(x, src), L.gather(x, dst)], axis=-1)
+        msgs = jax.nn.relu(m_in @ params[f"msg_w{i}"] + params[f"msg_b{i}"])
+        aggs = [L.scatter_mean(msgs, dst, n), L.scatter_max(msgs, dst, n),
+                L.scatter_min(msgs, dst, n), L.scatter_std(msgs, dst, n)]
+        views = []
+        for a in aggs:
+            views += [a, a * amp, a * att]
+        h = jnp.concatenate([x] + views, axis=-1)
+        x = x + jax.nn.relu(h @ params[f"tower_w{i}"] + params[f"tower_b{i}"])
+    return x @ params["head_w"] + params["head_b"]
+
+
+def loss_fn(params: dict, batch: dict, cfg: PNAConfig) -> jnp.ndarray:
+    logits = forward(params, batch, cfg)
+    labels = jnp.where(batch["label_mask"], batch["labels"], -100)
+    return cross_entropy_loss(logits, labels)

@@ -1,0 +1,677 @@
+"""Decoder-only transformer family (dense + MoE) — pure functional JAX.
+
+Covers all five assigned LM architectures through one config:
+
+  * GQA attention (n_kv_heads <= n_heads), optional QKV bias (qwen2),
+    RoPE with partial rotary (stablelm rope_pct=0.25), RMSNorm or LayerNorm.
+  * Dense SwiGLU FFN, or MoE FFN with routed top-k experts + optional
+    shared experts with a sigmoid gate (qwen2-moe), capacity-based
+    dispatch (GShard-style, sort + scatter — static shapes for AOT).
+  * ``jax.lax.scan`` over layers (small HLO, fast 512-device compiles) with
+    optional per-layer remat.
+  * Three entry points: ``train_step_loss`` (causal LM loss), ``prefill``
+    (builds the KV cache) and ``decode_step`` (one token against the cache)
+    — the latter two lower the ``serve_step`` shapes of the dry-run.
+
+Attention backends: ``dense`` (materialized scores) or ``chunked`` —
+an online-softmax scan over KV chunks (FlashAttention dataflow expressed
+in pure jnp, so it compiles for any backend; on real TPU the Pallas kernel
+in kernels/flash_attention implements the same contract).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import cross_entropy_loss, dense_init, layer_norm, rms_norm
+
+Params = dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str = "transformer"
+    n_layers: int = 2
+    d_model: int = 128
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    d_head: int = 32
+    d_ff: int = 256
+    vocab: int = 1024
+    max_seq: int = 4096
+    qkv_bias: bool = False
+    norm: str = "rmsnorm"            # "rmsnorm" | "layernorm"
+    rope_pct: float = 1.0
+    rope_theta: float = 10000.0
+    tie_embeddings: bool = False
+    # --- MoE ---
+    moe: bool = False
+    n_experts: int = 0               # routed experts (router logits)
+    n_experts_padded: int = 0        # physical expert slots (EP divisibility)
+    top_k: int = 0
+    moe_d_ff: int = 0                # per-routed-expert hidden
+    n_shared_experts: int = 0
+    shared_d_ff: int = 0
+    shared_expert_gate: bool = False  # qwen2-moe sigmoid gate on shared out
+    router_norm_topk: bool = False    # dbrx renormalizes top-k weights
+    capacity_factor: float = 1.25
+    lb_loss_coef: float = 0.01
+    moe_dispatch: str = "scatter"     # "scatter" (GShard-style value
+    #   scatter; the paper-faithful baseline) | "gather" (slot->token
+    #   gather formulation: value-sized ops are all gathers + one masked
+    #   psum-combine; only int32 index arrays are scattered — measured
+    #   in EXPERIMENTS.md §Perf to cut the dispatch collectives)
+    # --- runtime ---
+    dtype: Any = jnp.bfloat16
+    attn_impl: str = "chunked"        # "dense" | "chunked"
+    attn_chunk: int = 1024
+    remat: bool = True
+    moe_ep_axis: Optional[str] = None  # mesh axis for the (E, C, d) dispatch
+    #   buffer (expert parallelism); set by the launcher, e.g. "model"
+    # Unrolled (python-loop) execution. XLA's cost_analysis counts a
+    # while-loop body ONCE, not x trip count (verified in EXPERIMENTS.md
+    # §Dry-run), so the dry-run lowers unrolled programs for exact
+    # FLOP/byte accounting; unrolling also enables causal block skipping
+    # in the chunked attention (fully-masked tiles never emitted).
+    unroll_layers: bool = False
+    attn_unroll: bool = False
+    # Keep the post-softmax probability tile in bf16 for the PV matmul
+    # (running max/denominator stay f32): halves the dominant attention
+    # tile traffic at <=1e-2 relative error (FlashAttention-2 keeps the
+    # same compromise on TPU/GPU kernels).
+    attn_p_bf16: bool = False
+    # Chunked cross-entropy: compute logits + CE per sequence chunk
+    # (python loop, checkpointed) instead of materializing the full
+    # (B, S, V/TP) f32 logits (+ iota mask) at once. 0 = disabled.
+    ce_chunk: int = 0
+    # Megatron-style head tensor-parallelism. Projections are stored 4-D
+    # (d, H, dh) and sharded on the HEAD axis, which GSPMD pads when H
+    # doesn't divide the model axis (smollm: 15 heads over 16 ranks) —
+    # imbalance <= 1 head, no weight replication, no per-layer batch
+    # reshard.  When n_kv_heads doesn't divide the axis, K/V are expanded
+    # to per-q-head copies before attention (attn_kv_expand) so the S^2
+    # attention core is sharded by q-heads instead of idling ranks.
+    attn_head_axis: Optional[str] = None
+    attn_kv_expand: bool = False
+    # (kept for §Perf ablation: redistribute batch over (data x model) for
+    # the attention section instead of head TP — measured pathological,
+    # see EXPERIMENTS.md)
+    attn_batch_shard_axes: Optional[tuple] = None
+    batch_axes: Optional[tuple] = None
+
+    @property
+    def e_pad(self) -> int:
+        return self.n_experts_padded or self.n_experts
+
+    def n_params(self) -> int:
+        """Total parameter count (padding experts excluded)."""
+        d, H, Hk, dh, f = (self.d_model, self.n_heads, self.n_kv_heads,
+                           self.d_head, self.d_ff)
+        attn = d * (H * dh) + 2 * d * (Hk * dh) + (H * dh) * d
+        if self.qkv_bias:
+            attn += (H + 2 * Hk) * dh
+        if self.moe:
+            ffn = self.n_experts * 3 * d * self.moe_d_ff + d * self.n_experts
+            if self.n_shared_experts:
+                ffn += 3 * d * self.shared_d_ff + (d if self.shared_expert_gate else 0)
+        else:
+            ffn = 3 * d * f
+        norms = 2 * d * (2 if self.norm == "layernorm" else 1)
+        per_layer = attn + ffn + norms
+        embed = self.vocab * d
+        head = 0 if self.tie_embeddings else d * self.vocab
+        return self.n_layers * per_layer + embed + head + d
+
+    def n_active_params(self) -> int:
+        """Parameters touched per token (MoE: top_k routed + shared)."""
+        if not self.moe:
+            return self.n_params()
+        d = self.d_model
+        routed_all = self.n_experts * 3 * d * self.moe_d_ff
+        routed_act = self.top_k * 3 * d * self.moe_d_ff
+        return self.n_params() - self.n_layers * (routed_all - routed_act)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: TransformerConfig, key: jax.Array) -> Params:
+    d, H, Hk, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    L = cfg.n_layers
+    keys = iter(jax.random.split(key, 32))
+    dt = cfg.dtype
+
+    def W(k, *shape, scale=None):
+        return dense_init(k, shape, scale=scale, dtype=dt)
+
+    layers: Params = {
+        "attn_norm_scale": jnp.ones((L, d), dt),
+        "ffn_norm_scale": jnp.ones((L, d), dt),
+        # 4-D projections: head axis explicit so TP shards whole heads
+        "wq": W(next(keys), L, d, H, dh),
+        "wk": W(next(keys), L, d, Hk, dh),
+        "wv": W(next(keys), L, d, Hk, dh),
+        "wo": W(next(keys), L, H, dh, d),
+    }
+    if cfg.norm == "layernorm":
+        layers["attn_norm_bias"] = jnp.zeros((L, d), dt)
+        layers["ffn_norm_bias"] = jnp.zeros((L, d), dt)
+    if cfg.qkv_bias:
+        layers["bq"] = jnp.zeros((L, H, dh), dt)
+        layers["bk"] = jnp.zeros((L, Hk, dh), dt)
+        layers["bv"] = jnp.zeros((L, Hk, dh), dt)
+    if cfg.moe:
+        E, fe = cfg.e_pad, cfg.moe_d_ff
+        layers["router"] = dense_init(next(keys), (L, d, cfg.n_experts),
+                                      dtype=jnp.float32)  # router in f32
+        layers["we_gate"] = W(next(keys), L, E, d, fe)
+        layers["we_up"] = W(next(keys), L, E, d, fe)
+        layers["we_down"] = W(next(keys), L, E, fe, d)
+        if cfg.n_shared_experts:
+            fs = cfg.shared_d_ff
+            layers["ws_gate"] = W(next(keys), L, d, fs)
+            layers["ws_up"] = W(next(keys), L, d, fs)
+            layers["ws_down"] = W(next(keys), L, fs, d)
+            if cfg.shared_expert_gate:
+                layers["shared_gate"] = W(next(keys), L, d, 1)
+    else:
+        f = cfg.d_ff
+        layers["w_gate"] = W(next(keys), L, d, f)
+        layers["w_up"] = W(next(keys), L, d, f)
+        layers["w_down"] = W(next(keys), L, f, d)
+
+    params: Params = {
+        "embed": dense_init(next(keys), (cfg.vocab, d), scale=0.02, dtype=dt),
+        "final_norm_scale": jnp.ones((d,), dt),
+        "layers": layers,
+    }
+    if cfg.norm == "layernorm":
+        params["final_norm_bias"] = jnp.zeros((d,), dt)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = W(next(keys), d, cfg.vocab)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def _rope_freqs(cfg: TransformerConfig) -> jnp.ndarray:
+    rot = int(cfg.d_head * cfg.rope_pct) // 2 * 2
+    return 1.0 / (cfg.rope_theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, cfg: TransformerConfig
+               ) -> jnp.ndarray:
+    """x: [B, S, H, dh]; positions: [B, S] (absolute). Partial rotary."""
+    freqs = _rope_freqs(cfg)                       # [rot/2]
+    rot = 2 * freqs.shape[0]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [B,S,rot/2]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    xr = x[..., :rot].astype(jnp.float32)
+    x1, x2 = xr[..., : rot // 2], xr[..., rot // 2:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return jnp.concatenate([out.astype(x.dtype), x[..., rot:]], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# attention backends
+# ---------------------------------------------------------------------------
+
+def _dense_attention(q, k, v, *, causal: bool, q_offset) -> jnp.ndarray:
+    """q: [B,S,H,dh]; k,v: [B,T,Hk,dh].  q_offset: absolute position of
+    q[0] minus absolute position of k[0] (for caches/prefill)."""
+    B, S, H, dh = q.shape
+    T, Hk = k.shape[1], k.shape[2]
+    g = H // Hk
+    qh = q.reshape(B, S, Hk, g, dh)
+    scores = jnp.einsum("bshgd,bthd->bhgst", qh.astype(jnp.float32),
+                        k.astype(jnp.float32)) * (dh ** -0.5)
+    if causal:
+        qpos = jnp.arange(S)[:, None] + q_offset
+        kpos = jnp.arange(T)[None, :]
+        mask = kpos <= qpos
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgst,bthd->bshgd", probs, v.astype(jnp.float32))
+    return out.reshape(B, S, H, dh).astype(q.dtype)
+
+
+def _chunked_attention(q, k, v, *, causal: bool, q_offset, chunk: int,
+                       unroll: bool = False, p_bf16: bool = False) -> jnp.ndarray:
+    """Online-softmax over (q-chunk outer, kv-chunk inner) scans — the
+    FlashAttention dataflow in pure jnp.
+
+    Memory shape: the outer scan over q chunks emits its result as a scan
+    *output* (no giant carry), and the inner kv scan carries only the
+    (B, Hk, g, bq, dh) running state, so the peak live set is one
+    (bq x bk) score tile + one q-chunk state — O(S·chunk), not O(S²).
+    The outer body is checkpointed: a layer's backward recomputes one
+    q-chunk at a time."""
+    B, S, H, dh = q.shape
+    T, Hk = k.shape[1], k.shape[2]
+    g = H // Hk
+    bq = min(chunk, S)
+    nq = -(-S // bq)
+    bk = min(chunk, T)
+    nk = -(-T // bk)
+    qp = jnp.pad(q, ((0, 0), (0, nq * bq - S), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, nk * bk - T), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, nk * bk - T), (0, 0), (0, 0)))
+    # (n, B, b, Hk, {g,}, dh) chunked layouts, f32 compute
+    qc = qp.reshape(B, nq, bq, Hk, g, dh).transpose(1, 0, 2, 3, 4, 5)
+    kc = kp.reshape(B, nk, bk, Hk, dh).transpose(1, 0, 2, 3, 4)
+    vc = vp.reshape(B, nk, bk, Hk, dh).transpose(1, 0, 2, 3, 4)
+
+    def kv_body(carry, kxs, qb, qpos):
+        m, l, acc = carry
+        ki, kb, vb = kxs
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qb, kb.astype(jnp.float32)
+                       ) * (dh ** -0.5)
+        kpos = ki * bk + jnp.arange(bk)[None, :]
+        mask = kpos < T
+        if causal:
+            mask &= kpos <= qpos
+        s = jnp.where(mask[None, None, None], s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l = alpha * l + p.sum(-1)
+        if p_bf16:
+            pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(jnp.bfloat16),
+                            vb.astype(jnp.bfloat16),
+                            preferred_element_type=jnp.float32)
+        else:
+            pv = jnp.einsum("bhgqk,bkhd->bhgqd", p, vb.astype(jnp.float32))
+        acc = alpha[..., None] * acc + pv
+        return (m_new, l, acc), None
+
+    def q_init(qi_static_or_traced):
+        return (jnp.full((B, Hk, g, bq), -1e30, jnp.float32),
+                jnp.zeros((B, Hk, g, bq), jnp.float32),
+                jnp.zeros((B, Hk, g, bq, dh), jnp.float32))
+
+    def finish(m, l, acc):
+        return (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+
+    if unroll:
+        # python-loop tiles: exact HLO cost accounting + causal block skip
+        # (fully-masked tiles are never emitted). Requires static q_offset.
+        off = int(q_offset)
+
+        def tile(qb, qpos, ki, carry):
+            return kv_body(carry, (ki, kc[ki], vc[ki]), qb, qpos)[0]
+
+        tile = jax.checkpoint(tile)  # one live (bq x bk) tile per backward
+        outs = []
+        for qi in range(nq):
+            qb = qc[qi].astype(jnp.float32)
+            qpos = qi * bq + jnp.arange(bq)[:, None] + off
+            carry = q_init(qi)
+            q_hi = qi * bq + bq - 1 + off   # highest query position
+            for ki in range(nk):
+                if causal and ki * bk > q_hi:
+                    continue                 # block fully in the future
+                carry = tile(qb, qpos, ki, carry)
+            outs.append(finish(*carry))
+        ys = jnp.stack(outs)
+    else:
+        def q_body(_, xs):
+            qi, qb = xs
+            qb = qb.astype(jnp.float32)                 # [B,bq,Hk,g,dh]
+            qpos = qi * bq + jnp.arange(bq)[:, None] + q_offset
+            (m, l, acc), _ = jax.lax.scan(
+                functools.partial(kv_body, qb=qb, qpos=qpos),
+                q_init(qi), (jnp.arange(nk), kc, vc))
+            return None, finish(m, l, acc)
+
+        _, ys = jax.lax.scan(jax.checkpoint(q_body), None,
+                             (jnp.arange(nq), qc))
+    # ys: [nq, B, Hk, g, bq, dh] -> [B, S, H, dh]
+    out = ys.transpose(1, 0, 4, 2, 3, 5).reshape(B, nq * bq, H, dh)
+    return out[:, :S]
+
+
+def attention(q, k, v, cfg: TransformerConfig, *, causal: bool, q_offset=0):
+    if cfg.attn_impl == "dense" or q.shape[1] == 1:
+        return _dense_attention(q, k, v, causal=causal, q_offset=q_offset)
+    return _chunked_attention(q, k, v, causal=causal, q_offset=q_offset,
+                              chunk=cfg.attn_chunk, unroll=cfg.attn_unroll,
+                              p_bf16=cfg.attn_p_bf16)
+
+
+# ---------------------------------------------------------------------------
+# FFN blocks
+# ---------------------------------------------------------------------------
+
+def swiglu(x, wg, wu, wd):
+    h = jax.nn.silu(x @ wg) * (x @ wu)
+    return h @ wd
+
+
+def moe_ffn(x: jnp.ndarray, lp: Params, cfg: TransformerConfig, *,
+            no_drop: bool = False, eval_mode: bool = False
+            ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Routed top-k MoE with capacity-based dispatch (sort + scatter).
+
+    x: [T, d] (flattened tokens).  Returns (out [T, d], lb_loss scalar).
+    ``no_drop=True`` (decode: T is small) sizes the buffer for the worst
+    case so no assignment is ever dropped; ``eval_mode=True`` (prefill)
+    uses a 2x capacity factor — the no-drop bound C = T*K at prefill T ~ 1M
+    would inflate expert compute Ep-fold (measured 16x on dbrx).
+    """
+    T, d = x.shape
+    E, Ep, K = cfg.n_experts, cfg.e_pad, cfg.top_k
+    if no_drop:
+        C = T * K  # worst case: every token routes to one expert
+    elif eval_mode:
+        C = min(T * K, max(1, int(2.0 * T * K / Ep)))
+    else:
+        C = max(1, int(cfg.capacity_factor * T * K / Ep))
+
+    logits = (x.astype(jnp.float32) @ lp["router"])            # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, K)                        # [T, K]
+    if cfg.router_norm_topk:
+        gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # Switch-style load-balance loss over the *routed* experts.
+    me = probs.mean(0)                                          # [E]
+    ce = jnp.zeros(E, jnp.float32).at[idx.reshape(-1)].add(1.0) / (T * K)
+    lb_loss = cfg.lb_loss_coef * E * jnp.sum(me * ce)
+
+    expert_flat = idx.reshape(-1)                               # [T*K]
+    tok_flat = jnp.repeat(jnp.arange(T), K)                     # [T*K]
+    order = jnp.argsort(expert_flat)                            # stable
+    e_sorted = expert_flat[order]
+    t_sorted = tok_flat[order]
+    # position of each assignment within its expert
+    counts = jnp.zeros(Ep, jnp.int32).at[e_sorted].add(1)
+    starts = jnp.concatenate([jnp.zeros(1, jnp.int32),
+                              jnp.cumsum(counts)[:-1].astype(jnp.int32)])
+    pos = jnp.arange(T * K, dtype=jnp.int32) - starts[e_sorted]
+    keep = pos < C                                              # overflow drops
+
+    from jax.sharding import PartitionSpec as _P
+
+    if cfg.moe_dispatch == "gather":
+        # slot -> token GATHER: buf[e, c] = x[token filling slot (e, c)].
+        # No (T*K, d) value scatter exists in the program; the only
+        # scatters are int32 index arrays (1000x smaller).
+        slot_assign = starts[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
+        valid_slot = jnp.arange(C)[None, :] < counts[:, None]   # [Ep, C]
+        slot_tok = t_sorted[jnp.clip(slot_assign, 0, T * K - 1)]
+        buf = jnp.where(valid_slot[..., None], x[slot_tok], 0)
+    else:
+        buf = jnp.zeros((Ep, C, d), x.dtype)
+        # overflow assignments carry pos >= C -> out of bounds -> dropped
+        buf = buf.at[e_sorted, pos].set(x[t_sorted], mode="drop")
+    if cfg.moe_ep_axis is not None:
+        # expert parallelism: dispatch buffer lives expert-sharded; the
+        # token->expert exchange becomes the EP collective in the HLO
+        buf = jax.lax.with_sharding_constraint(
+            buf, _P(cfg.moe_ep_axis, None, None))
+    # per-expert SwiGLU on the MXU: [E,C,d] x [E,d,f]
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, lp["we_gate"])) * \
+        jnp.einsum("ecd,edf->ecf", buf, lp["we_up"])
+    yb = jnp.einsum("ecf,efd->ecd", h, lp["we_down"])           # [E,C,d]
+
+    if cfg.moe_dispatch == "gather":
+        # combine by GATHER in original assignment order + reduce over K
+        pos_unsorted = jnp.zeros(T * K, jnp.int32).at[order].set(pos)
+        e_unsorted = expert_flat
+        y_flat = yb[e_unsorted, jnp.minimum(pos_unsorted, C - 1)]  # [T*K, d]
+        keep_unsorted = pos_unsorted < C
+        w = gates.reshape(-1) * keep_unsorted                      # [T*K]
+        out = jnp.sum(y_flat.reshape(T, K, d).astype(jnp.float32)
+                      * w.reshape(T, K)[..., None], axis=1)
+    else:
+        y_assign = yb[e_sorted, jnp.minimum(pos, C - 1)]        # [T*K, d]
+        gate_sorted = gates.reshape(-1)[order] * keep
+        out = jnp.zeros((T, d), jnp.float32).at[t_sorted].add(
+            y_assign.astype(jnp.float32) * gate_sorted[:, None])
+
+    if cfg.n_shared_experts:
+        shared = swiglu(x, lp["ws_gate"], lp["ws_up"], lp["ws_down"])
+        if cfg.shared_expert_gate:
+            shared = shared * jax.nn.sigmoid(
+                x.astype(jnp.float32) @ lp["shared_gate"]).astype(shared.dtype)
+        out = out + shared.astype(jnp.float32)
+    return out.astype(x.dtype), lb_loss
+
+
+# ---------------------------------------------------------------------------
+# transformer blocks / forward
+# ---------------------------------------------------------------------------
+
+def _norm(x, scale, bias, cfg):
+    if cfg.norm == "layernorm":
+        return layer_norm(x, scale, bias)
+    return rms_norm(x, scale)
+
+
+def _wsc(x, axes_first, ndim):
+    """with_sharding_constraint on the leading (batch) dim."""
+    from jax.sharding import PartitionSpec as _P
+    return jax.lax.with_sharding_constraint(
+        x, _P(axes_first, *([None] * (ndim - 1))))
+
+
+def _layer(x, lp: Params, cfg: TransformerConfig, positions, cache_k, cache_v,
+           cache_len):
+    """One transformer block.  cache_*: [B, Smax, Hk, dh] or None."""
+    B, S, d = x.shape
+    H, Hk, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+
+    h = _norm(x, lp["attn_norm_scale"], lp.get("attn_norm_bias"), cfg)
+    if cfg.attn_batch_shard_axes and cache_k is None:
+        # §Perf ablation path: spread the batch over the idle model axis
+        # instead of head TP (measured pathological — kept for comparison).
+        h = _wsc(h, cfg.attn_batch_shard_axes, 3)
+    q = jnp.einsum("bsd,dhk->bshk", h, lp["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", h, lp["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", h, lp["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + lp["bq"], k + lp["bk"], v + lp["bv"]
+    q = apply_rope(q, positions, cfg)
+    k = apply_rope(k, positions, cfg)
+
+    if cache_k is not None:
+        # functional cache update at [.., cache_len : cache_len+S, ..];
+        # the cache stores UNexpanded KV heads
+        cache_k = jax.lax.dynamic_update_slice(
+            cache_k, k.astype(cache_k.dtype), (0, cache_len, 0, 0))
+        cache_v = jax.lax.dynamic_update_slice(
+            cache_v, v.astype(cache_v.dtype), (0, cache_len, 0, 0))
+        kk, vv = cache_k, cache_v
+        q_offset = cache_len
+    else:
+        kk, vv = k, v
+        q_offset = 0
+
+    # Head-TP activation slicing applies to every S > 1 attention
+    # (training AND prefill); single-token decode attention is tiny and
+    # stays on the cache's own sharding.
+    if S > 1:
+        if cfg.attn_kv_expand:
+            # n_kv_heads doesn't divide the TP axis: expand K/V to q-heads
+            # so the S^2 core shards by q-head (no idle ranks)
+            kk = jnp.repeat(kk, H // Hk, axis=2)
+            vv = jnp.repeat(vv, H // Hk, axis=2)
+        if cfg.attn_head_axis is not None:
+            from jax.sharding import PartitionSpec as _P
+            b_ax = tuple(cfg.batch_axes) if cfg.batch_axes else None
+            hspec = _P(b_ax, None, cfg.attn_head_axis, None)
+            q = jax.lax.with_sharding_constraint(q, hspec)
+            kk = jax.lax.with_sharding_constraint(kk, hspec)
+            vv = jax.lax.with_sharding_constraint(vv, hspec)
+
+    attn = attention(q, kk, vv, cfg, causal=True, q_offset=q_offset)
+    attn_out = jnp.einsum("bshk,hkd->bsd", attn, lp["wo"])
+    if cfg.attn_batch_shard_axes and cache_k is None:
+        attn_out = _wsc(attn_out, cfg.batch_axes, 3)
+    x = x + attn_out
+
+    h = _norm(x, lp["ffn_norm_scale"], lp.get("ffn_norm_bias"), cfg)
+    if cfg.moe:
+        serving = cache_k is not None
+        y, lb = moe_ffn(h.reshape(B * S, d), lp, cfg,
+                        no_drop=serving and B * S <= 4096,
+                        eval_mode=serving)
+        y = y.reshape(B, S, d)
+    else:
+        y, lb = swiglu(h, lp["w_gate"], lp["w_up"], lp["w_down"]), 0.0
+    return x + y, cache_k, cache_v, lb
+
+
+def forward(params: Params, tokens: jnp.ndarray, cfg: TransformerConfig, *,
+            cache: Optional[Params] = None) -> tuple[jnp.ndarray, Optional[Params], jnp.ndarray]:
+    """tokens: [B, S] -> (logits [B, S, V], new_cache, lb_loss).
+
+    With ``cache`` (dict: k/v [L, B, Smax, Hk, dh], len scalar) the call is a
+    prefill (S > 1) or decode (S == 1) step at position ``cache["len"]``.
+    """
+    B, S = tokens.shape
+    x = params["embed"][tokens].astype(cfg.dtype)
+    cache_len = cache["len"] if cache is not None else 0
+    positions = jnp.arange(S)[None, :] + cache_len
+
+    def body(carry, xs):
+        x, lb_sum = carry
+        if cache is not None:
+            lp, ck, cv = xs
+            x, ck, cv, lb = _layer(x, lp, cfg, positions, ck, cv, cache_len)
+            return (x, lb_sum + lb), (ck, cv)
+        lp = xs
+        x, _, _, lb = _layer(x, lp, cfg, positions, None, None, 0)
+        return (x, lb_sum + lb), None
+
+    if cfg.unroll_layers:
+        # python loop: exact per-layer HLO cost; remat per layer.
+        # Caches in unrolled mode are LAYERED (a tuple of per-layer
+        # arrays, see init_cache): each layer touches only its own
+        # (B, S, Hk, dh) buffer — a stacked (L, ...) cache would need
+        # full-buffer update ops whose cost counts L x the whole cache.
+        body_fn = jax.checkpoint(body) if (cfg.remat and cache is None) else body
+        carry = (x, jnp.float32(0))
+        new_k, new_v = [], []
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            if cache is not None:
+                carry, (ck, cv) = body_fn(carry, (lp, cache["k"][i], cache["v"][i]))
+                new_k.append(ck)
+                new_v.append(cv)
+            else:
+                carry, _ = body_fn(carry, lp)
+        x, lb_loss = carry
+        ys = (tuple(new_k), tuple(new_v)) if cache is not None else None
+    else:
+        body_fn = jax.checkpoint(body) if (cfg.remat and cache is None) else body
+        xs = (params["layers"], cache["k"], cache["v"]) if cache is not None \
+            else params["layers"]
+        (x, lb_loss), ys = jax.lax.scan(body_fn, (x, jnp.float32(0)), xs)
+
+    x = _norm(x, params["final_norm_scale"], params.get("final_norm_bias"), cfg)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head.astype(x.dtype)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"k": ys[0], "v": ys[1], "len": cache_len + S}
+    return logits, new_cache, lb_loss
+
+
+# ---------------------------------------------------------------------------
+# entry points (lowered by the dry-run)
+# ---------------------------------------------------------------------------
+
+def loss_fn(params: Params, tokens: jnp.ndarray, labels: jnp.ndarray,
+            cfg: TransformerConfig) -> jnp.ndarray:
+    if not cfg.ce_chunk:
+        logits, _, lb = forward(params, tokens, cfg)
+        return cross_entropy_loss(logits, labels) + lb
+    # chunked CE: head matmul + CE one sequence chunk at a time
+    x, lb = forward_hidden(params, tokens, cfg)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+
+    def chunk_nll(xc, lc):
+        logits = xc @ head.astype(xc.dtype)
+        logits = logits.astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        iota = jax.lax.broadcasted_iota(lc.dtype, logits.shape, logits.ndim - 1)
+        gold = jnp.sum(jnp.where(iota == lc[..., None], logits, 0), axis=-1)
+        return jnp.sum(logz - gold)
+
+    chunk_nll = jax.checkpoint(chunk_nll)
+    B, S = tokens.shape
+    c = cfg.ce_chunk
+    total = jnp.float32(0)
+    for s0 in range(0, S, c):
+        total = total + chunk_nll(x[:, s0:s0 + c], labels[:, s0:s0 + c])
+    return total / (B * S) + lb
+
+
+def forward_hidden(params: Params, tokens: jnp.ndarray, cfg: TransformerConfig
+                   ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """forward() without the LM head: final hidden states + lb loss."""
+    logits_unused = None
+    B, S = tokens.shape
+    x = params["embed"][tokens].astype(cfg.dtype)
+    positions = jnp.arange(S)[None, :]
+
+    def body(carry, lp):
+        x, lb_sum = carry
+        x, _, _, lb = _layer(x, lp, cfg, positions, None, None, 0)
+        return (x, lb_sum + lb), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    if cfg.unroll_layers:
+        carry = (x, jnp.float32(0))
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            carry, _ = body_fn(carry, lp)
+        x, lb = carry
+    else:
+        (x, lb), _ = jax.lax.scan(body_fn, (x, jnp.float32(0)),
+                                  params["layers"])
+    x = _norm(x, params["final_norm_scale"], params.get("final_norm_bias"), cfg)
+    return x, lb
+
+
+def init_cache(cfg: TransformerConfig, batch: int, max_len: int,
+               dtype=None) -> Params:
+    dtype = dtype or cfg.dtype
+    # "len" stays a python int so a fresh-cache prefill has a STATIC
+    # q_offset (required by the unrolled attention's causal tile skip);
+    # decode steps carry it as a traced scalar input instead.
+    if cfg.unroll_layers:
+        # layered cache: tuple of per-layer (B, S, Hk, dh) buffers
+        shape = (batch, max_len, cfg.n_kv_heads, cfg.d_head)
+        return {"k": tuple(jnp.zeros(shape, dtype) for _ in range(cfg.n_layers)),
+                "v": tuple(jnp.zeros(shape, dtype) for _ in range(cfg.n_layers)),
+                "len": 0}
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.d_head)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+            "len": 0}
+
+
+def prefill(params: Params, tokens: jnp.ndarray, cfg: TransformerConfig,
+            max_len: Optional[int] = None) -> tuple[jnp.ndarray, Params]:
+    """Build a KV cache from a prompt; returns (last-token logits, cache)."""
+    B, S = tokens.shape
+    cache = init_cache(cfg, B, max_len or S)
+    logits, cache, _ = forward(params, tokens, cfg, cache=cache)
+    return logits[:, -1], cache
+
+
+def decode_step(params: Params, tokens: jnp.ndarray, cache: Params,
+                cfg: TransformerConfig) -> tuple[jnp.ndarray, Params]:
+    """One-token decode: tokens [B, 1] -> (logits [B, V], updated cache)."""
+    logits, cache, _ = forward(params, tokens, cfg, cache=cache)
+    return logits[:, -1], cache

@@ -1,0 +1,3 @@
+from repro.optim.adamw import (AdamWConfig, adamw_init, adamw_update,  # noqa: F401
+                               cosine_schedule, global_norm)
+from repro.optim.compression import (ef_compress_psum, ef_state_init)  # noqa: F401

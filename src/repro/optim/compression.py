@@ -1,0 +1,69 @@
+"""Error-feedback quantized gradient all-reduce (distributed-optimization
+trick for the data-parallel axis).
+
+EF-SGD/1-bit-Adam lineage [Seide et al. 2014; arXiv:2102.02888]: each
+device quantizes (grad + residual) to a few bits, the quantized values are
+summed across the DP axis, and the quantization error is fed back into the
+next step's residual — unbiased in the long run, wire traffic cut by
+4x (int8 container) vs f32.
+
+TPU/XLA adaptation (DESIGN.md §2): XLA exposes no sub-byte wire format, so
+the smallest collective element is int8.  A psum accumulates *in* the wire
+type, so the quantized levels must leave headroom for the axis size:
+levels = 127 // axis_size (e.g. +/-7 for a 16-way data axis).  Cross-pod
+reduction then runs hierarchically: int8 psum inside the pod, f32 psum of
+the dequantized partial across the (2-way) pod axis — matching how
+1-bit-Adam splits intra/inter-node phases.  Used inside ``shard_map`` train
+steps (launch/train.py --compress-grads); the collective-bytes win is
+visible in the dry-run HLO (all-reduce over s8 instead of f32).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def ef_state_init(grads_like: Any) -> Any:
+    """Residual (error-feedback) buffer, same structure as grads, f32."""
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads_like)
+
+
+def _quantize(x: jnp.ndarray, levels: int, axis_name: str
+              ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric per-tensor quantization with a *shared* scale (psum-max),
+    so dequantization after the int8 psum is exact w.r.t. the shared grid."""
+    amax = jax.lax.pmax(jnp.max(jnp.abs(x)), axis_name)
+    scale = jnp.maximum(amax, 1e-12) / levels
+    q = jnp.clip(jnp.round(x / scale), -levels, levels).astype(jnp.int8)
+    return q, scale
+
+
+def ef_compress_psum(grads: Any, ef: Any, axis_name: str, *,
+                     axis_size: int,
+                     outer_axis_name: Optional[str] = None) -> tuple[Any, Any]:
+    """Quantized psum over ``axis_name`` with error feedback.
+
+    Returns (mean_grads_f32, new_ef).  ``axis_size`` bounds the int8
+    accumulation headroom; ``outer_axis_name`` (e.g. "pod") adds the
+    hierarchical second-phase f32 psum.
+    """
+    levels = max(1, 127 // axis_size)
+
+    def one(g, e):
+        x = g.astype(jnp.float32) + e
+        q, scale = _quantize(x, levels, axis_name)
+        new_e = x - q.astype(jnp.float32) * scale     # local residual
+        summed = jax.lax.psum(q, axis_name)           # s8 on the wire
+        mean = summed.astype(jnp.float32) * scale / axis_size
+        if outer_axis_name is not None:
+            mean = jax.lax.pmean(mean, outer_axis_name)
+        return mean, new_e
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(ef)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (treedef.unflatten([o[0] for o in outs]),
+            treedef.unflatten([o[1] for o in outs]))

@@ -1,0 +1,66 @@
+"""Property-test harness.
+
+Uses `hypothesis` when available; otherwise falls back to a seeded
+random-case sweep with the same API surface we need (`given` + strategies
+over ints/floats/arrays).  The fallback keeps the property-style structure
+(each test is a predicate over randomly drawn inputs) and prints the
+failing seed for reproduction.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import numpy as np
+
+try:  # pragma: no cover - environment-dependent
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+N_CASES = int(os.environ.get("PROP_CASES", "25"))
+
+
+class Draw:
+    def __init__(self, rng: np.random.Generator):
+        self.rng = rng
+
+    def int(self, lo: int, hi: int) -> int:
+        return int(self.rng.integers(lo, hi + 1))
+
+    def float(self, lo: float, hi: float) -> float:
+        return float(self.rng.uniform(lo, hi))
+
+    def ints(self, lo: int, hi: int, size) -> np.ndarray:
+        return self.rng.integers(lo, hi + 1, size)
+
+    def floats(self, size, scale: float = 1.0) -> np.ndarray:
+        return (self.rng.standard_normal(size) * scale).astype(np.float32)
+
+    def bool(self) -> bool:
+        return bool(self.rng.random() < 0.5)
+
+    def choice(self, seq):
+        return seq[int(self.rng.integers(0, len(seq)))]
+
+
+def prop(n_cases: int = N_CASES):
+    """Decorator: run ``test(draw)`` for ``n_cases`` seeded draws."""
+
+    def deco(fn):
+        def wrapper():
+            for case in range(n_cases):
+                rng = np.random.default_rng(1000 + case)
+                try:
+                    fn(Draw(rng))
+                except Exception:
+                    print(f"[prop] failing case seed={1000 + case} in {fn.__name__}")
+                    raise
+        # keep pytest discovery name but NOT the (draw) signature
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+
+    return deco

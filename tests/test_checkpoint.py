@@ -1,0 +1,80 @@
+"""Checkpointing: roundtrip, atomicity, async, GC, elastic re-shard."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint as ck
+from repro.distributed.elastic import reshard
+
+
+@pytest.fixture
+def tree():
+    return {"params": {"w": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+                       "b": jnp.ones(4, jnp.bfloat16)},
+            "opt": {"step": jnp.int32(7), "m": [jnp.zeros(2), jnp.ones(3)]}}
+
+
+def test_roundtrip(tmp_path, tree):
+    ck.save(str(tmp_path), 5, tree)
+    step, got = ck.restore_latest(str(tmp_path), tree)
+    assert step == 5
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(tree)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, dtype=np.float32),
+                                      np.asarray(b, dtype=np.float32))
+
+
+def test_restore_latest_picks_max_and_ignores_tmp(tmp_path, tree):
+    ck.save(str(tmp_path), 3, tree)
+    ck.save(str(tmp_path), 11, jax.tree.map(lambda x: x + 1, tree))
+    os.makedirs(tmp_path / "step_00000099.tmp")  # crashed save
+    step, got = ck.restore_latest(str(tmp_path), tree)
+    assert step == 11
+    np.testing.assert_array_equal(np.asarray(got["opt"]["step"]), 8)
+
+
+def test_gc_keeps_last_k(tmp_path, tree):
+    for s in range(6):
+        ck.save(str(tmp_path), s, tree, keep_last=2)
+    steps = sorted(int(d[5:]) for d in os.listdir(tmp_path)
+                   if d.startswith("step_"))
+    assert steps == [4, 5]
+
+
+def test_async_checkpointer(tmp_path, tree):
+    ac = ck.AsyncCheckpointer(str(tmp_path), keep_last=3)
+    ac.save(1, tree)
+    ac.save(2, tree)   # waits for #1 internally
+    ac.wait()
+    assert ck.latest_step(str(tmp_path)) == 2
+
+
+def test_missing_leaf_raises(tmp_path, tree):
+    ck.save(str(tmp_path), 1, {"params": tree["params"]})
+    with pytest.raises(KeyError):
+        ck.restore(str(tmp_path), 1, tree)
+
+
+def test_elastic_reshard_roundtrip(tmp_path, tree):
+    """Save on one layout, restore re-sharded onto a (1-device) mesh with
+    explicit PartitionSpecs — the elastic-restart path."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    ck.save(str(tmp_path), 2, tree)
+    mesh = jax.make_mesh((1,), ("data",))
+    specs = {"params": {"w": P("data", None), "b": P(None)},
+             "opt": {"step": P(), "m": [P(None), P(None)]}}
+    shardings = jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                             is_leaf=lambda x: isinstance(x, P))
+    step, got = ck.restore_latest(str(tmp_path), tree, shardings=shardings)
+    assert step == 2
+    assert got["params"]["w"].sharding.spec == P("data", None)
+    np.testing.assert_array_equal(np.asarray(got["params"]["w"]),
+                                  np.asarray(tree["params"]["w"]))
+    # and move it again with reshard() (live re-mesh)
+    moved = reshard(got, mesh, specs)
+    np.testing.assert_array_equal(np.asarray(moved["params"]["w"]),
+                                  np.asarray(tree["params"]["w"]))

@@ -1,0 +1,89 @@
+"""CompBin (paper §IV): eq. (1) decode, roundtrips, sizes, random access."""
+
+import io
+
+import numpy as np
+import pytest
+
+from repro.core import compbin
+from repro.core.csr import CSR, csr_from_edges
+from tests._prop import prop
+
+
+def test_bytes_per_vertex_boundaries():
+    # b = ceil(log2|V| / 8)
+    assert compbin.bytes_per_vertex(2) == 1
+    assert compbin.bytes_per_vertex(256) == 1
+    assert compbin.bytes_per_vertex(257) == 2
+    assert compbin.bytes_per_vertex(2**16) == 2
+    assert compbin.bytes_per_vertex(2**16 + 1) == 3
+    assert compbin.bytes_per_vertex(2**24) == 3
+    # paper: for 2^24 <= |V| < 2^32 CompBin == binary CSR (4 bytes)
+    assert compbin.bytes_per_vertex(2**24 + 1) == 4
+    assert compbin.bytes_per_vertex(2**32 - 1) == 4
+    assert compbin.bytes_per_vertex(2**32 + 1) == 5
+
+
+def test_eq1_manual():
+    # decode of [0x01, 0x02, 0x03] with b=3 is 0x030201 (eq. 1, little-endian)
+    packed = np.array([0x01, 0x02, 0x03], dtype=np.uint8)
+    out = compbin.decode_ids(packed, 3)
+    assert out[0] == 0x01 + (0x02 << 8) + (0x03 << 16)
+
+
+@prop()
+def test_encode_decode_roundtrip(draw):
+    b = draw.int(1, 8)
+    n = draw.int(0, 2000)
+    hi = min(2 ** (8 * b) - 1, 2**63 - 1)
+    ids = draw.rng.integers(0, hi + 1 if hi < 2**63 else hi, n,
+                            dtype=np.uint64)
+    packed = compbin.encode_ids(ids, b)
+    assert packed.shape == (n * b,)
+    out = compbin.decode_ids(packed, b)
+    np.testing.assert_array_equal(out.astype(np.uint64), ids)
+
+
+@prop(10)
+def test_file_roundtrip_and_random_access(draw):
+    nv = draw.int(2, 5000)
+    ne = draw.int(0, 20000)
+    csr = csr_from_edges(draw.ints(0, nv - 1, ne), draw.ints(0, nv - 1, ne), nv)
+    blob = compbin.roundtrip_bytes(csr)
+    assert len(blob) == compbin.compbin_nbytes(nv, csr.n_edges)
+    f = compbin.CompBinFile(io.BytesIO(blob))
+    assert (f.n_vertices, f.n_edges) == (nv, csr.n_edges)
+    got = f.read_full()
+    assert got == csr
+    # O(1) random access to any adjacency list (the paper's key property)
+    for v in draw.ints(0, nv - 1, 5):
+        np.testing.assert_array_equal(
+            f.neighbors_of(int(v)).astype(np.int64),
+            csr.neighbors_of(int(v)).astype(np.int64))
+    # partition read
+    v0 = draw.int(0, nv - 1)
+    v1 = draw.int(v0, nv)
+    offs, nbrs = f.read_partition(v0, v1)
+    assert offs[0] == 0 and offs[-1] == len(nbrs)
+    exp = csr.neighbors[csr.offsets[v0]:csr.offsets[v1]]
+    np.testing.assert_array_equal(nbrs.astype(np.int64), exp.astype(np.int64))
+
+
+def test_size_formula_matches_table1_layout():
+    # CompBin size = header + 8(|V|+1) + b|E| — Table I's accounting
+    nv, ne = 1000, 5000
+    csr = csr_from_edges(np.random.default_rng(0).integers(0, nv, ne),
+                         np.random.default_rng(1).integers(0, nv, ne), nv)
+    blob = compbin.roundtrip_bytes(csr)
+    b = compbin.bytes_per_vertex(nv)
+    assert len(blob) == compbin.HEADER_SIZE + 8 * (nv + 1) + b * csr.n_edges
+
+
+def test_id_overflow_rejected():
+    with pytest.raises(ValueError):
+        compbin.encode_ids(np.array([256], np.uint64), 1)
+
+
+def test_bad_magic_rejected():
+    with pytest.raises(ValueError):
+        compbin.read_header(io.BytesIO(b"NOPE" + b"\x00" * 20))

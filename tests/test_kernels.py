@@ -1,0 +1,88 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.compbin_decode import compbin_decode, compbin_decode_ref
+from repro.kernels.flash_attention import attention_ref, flash_attention
+from repro.kernels.segment_sum import segment_sum, segment_sum_ref
+
+
+@pytest.mark.parametrize("b", [1, 2, 3, 4])
+@pytest.mark.parametrize("n", [1, 127, 128, 1000, 40000])
+def test_compbin_decode_sweep(b, n):
+    rng = np.random.default_rng(b * 1000 + n)
+    hi = min(2 ** (8 * b), 2**31)
+    ids = rng.integers(0, hi, n, dtype=np.int64)
+    packed = np.zeros((n, 8), np.uint8)
+    for i in range(b):
+        packed[:, i] = (ids >> (8 * i)) & 0xFF
+    flat = jnp.asarray(packed[:, :b].reshape(-1))
+    out_k = compbin_decode(flat, b, interpret=True)
+    out_r = compbin_decode_ref(flat, b)
+    np.testing.assert_array_equal(np.asarray(out_k), np.asarray(out_r))
+    np.testing.assert_array_equal(np.asarray(out_k), ids.astype(np.int32))
+
+
+@pytest.mark.parametrize("E,D,N", [(64, 16, 4), (513, 200, 7), (2048, 128, 1024),
+                                   (100, 1, 100), (1, 8, 1)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_segment_sum_sweep(E, D, N, dtype):
+    rng = np.random.default_rng(E + D + N)
+    msgs = jnp.asarray(rng.standard_normal((E, D)).astype(np.float32)).astype(dtype)
+    ids = jnp.asarray(rng.integers(-1, N, E).astype(np.int32))  # incl. padding
+    out_k = segment_sum(msgs, ids, N, interpret=True)
+    out_r = segment_sum_ref(msgs, ids, N)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               rtol=tol, atol=tol * 10)
+
+
+@pytest.mark.parametrize(
+    "B,Hq,Hkv,Sq,Skv,Dh,causal",
+    [
+        (2, 4, 2, 256, 256, 64, True),
+        (1, 8, 8, 128, 128, 128, True),
+        (1, 4, 1, 1, 384, 64, True),      # decode
+        (2, 6, 3, 100, 100, 64, True),    # unaligned -> padding
+        (1, 2, 2, 64, 256, 64, True),     # chunked prefill
+        (1, 2, 2, 128, 128, 64, False),
+        (1, 15, 5, 64, 64, 64, True),     # smollm-style heads
+    ],
+)
+def test_flash_attention_sweep(B, Hq, Hkv, Sq, Skv, Dh, causal):
+    rng = np.random.default_rng(Sq + Skv)
+    q = jnp.asarray(rng.standard_normal((B, Hq, Sq, Dh)).astype(np.float32)) * 0.3
+    k = jnp.asarray(rng.standard_normal((B, Hkv, Skv, Dh)).astype(np.float32)) * 0.3
+    v = jnp.asarray(rng.standard_normal((B, Hkv, Skv, Dh)).astype(np.float32))
+    out_k = flash_attention(q, k, v, causal=causal, interpret=True)
+    out_r = attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_bf16():
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal((1, 4, 128, 64)).astype(np.float32)).astype(jnp.bfloat16)
+    k = jnp.asarray(rng.standard_normal((1, 2, 128, 64)).astype(np.float32)).astype(jnp.bfloat16)
+    v = jnp.asarray(rng.standard_normal((1, 2, 128, 64)).astype(np.float32)).astype(jnp.bfloat16)
+    out_k = flash_attention(q, k, v, causal=True, interpret=True)
+    out_r = attention_ref(q, k, v, causal=True)
+    assert out_k.dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(out_k, dtype=np.float32),
+                               np.asarray(out_r), rtol=2e-2, atol=2e-2)
+
+
+def test_segment_sum_kernel_vs_xla_fallback():
+    # above MAX_KERNEL_SEGMENTS the op falls back to XLA scatter
+    from repro.kernels.segment_sum.ops import MAX_KERNEL_SEGMENTS
+    E, D, N = 256, 8, MAX_KERNEL_SEGMENTS + 1
+    rng = np.random.default_rng(1)
+    msgs = jnp.asarray(rng.standard_normal((E, D)).astype(np.float32))
+    ids = jnp.asarray(rng.integers(0, N, E).astype(np.int32))
+    out = segment_sum(msgs, ids, N)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(segment_sum_ref(msgs, ids, N)),
+                               rtol=1e-5, atol=1e-5)

@@ -1,0 +1,127 @@
+"""Transformer family: decode==forward, backend equivalences, MoE, params."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.models.transformer import (TransformerConfig, decode_step, forward,
+                                      init_params, loss_fn, moe_ffn, prefill)
+
+CFG = TransformerConfig(n_layers=2, d_model=64, n_heads=6, n_kv_heads=2,
+                        d_head=16, d_ff=128, vocab=256, dtype=jnp.float32,
+                        attn_impl="chunked", attn_chunk=32, qkv_bias=True,
+                        rope_pct=0.5)
+
+MOE_CFG = TransformerConfig(
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, d_head=16, d_ff=0,
+    vocab=256, dtype=jnp.float32, moe=True, n_experts=6, n_experts_padded=8,
+    top_k=2, moe_d_ff=32, n_shared_experts=2, shared_d_ff=64,
+    shared_expert_gate=True, capacity_factor=8.0)
+
+
+@pytest.fixture(scope="module")
+def toks():
+    return jax.random.randint(jax.random.key(1), (2, 65), 0, 256)
+
+
+@pytest.mark.parametrize("cfg", [CFG, MOE_CFG], ids=["dense", "moe"])
+def test_train_step_finite(cfg, toks):
+    p = init_params(cfg, jax.random.key(0))
+    loss, grads = jax.value_and_grad(loss_fn)(p, toks[:, :-1], toks[:, 1:], cfg)
+    assert np.isfinite(float(loss))
+    assert all(np.all(np.isfinite(np.asarray(g))) for g in jax.tree.leaves(grads))
+
+
+@pytest.mark.parametrize("cfg", [CFG, MOE_CFG], ids=["dense", "moe"])
+def test_prefill_decode_matches_forward(cfg, toks):
+    p = init_params(cfg, jax.random.key(0))
+    full, _, _ = forward(p, toks, cfg)
+    last, cache = prefill(p, toks[:, :-1], cfg, max_len=80)
+    np.testing.assert_allclose(np.asarray(last), np.asarray(full[:, -2]),
+                               rtol=2e-3, atol=2e-3)
+    step, cache = decode_step(p, toks[:, -1:], cache, cfg)
+    np.testing.assert_allclose(np.asarray(step), np.asarray(full[:, -1]),
+                               rtol=2e-3, atol=2e-3)
+    assert int(cache["len"]) == toks.shape[1]
+
+
+def test_attention_backends_agree(toks):
+    p = init_params(CFG, jax.random.key(0))
+    outs = []
+    for impl, unroll in [("dense", False), ("chunked", False), ("chunked", True)]:
+        cfg = dataclasses.replace(CFG, attn_impl=impl, attn_unroll=unroll)
+        f, _, _ = forward(p, toks, cfg)
+        outs.append(np.asarray(f))
+    np.testing.assert_allclose(outs[1], outs[0], rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(outs[2], outs[0], rtol=3e-4, atol=3e-4)
+
+
+def test_unrolled_layers_match_scan(toks):
+    p = init_params(CFG, jax.random.key(0))
+    f0, _, _ = forward(p, toks, CFG)
+    cfg_u = dataclasses.replace(CFG, unroll_layers=True, attn_unroll=True)
+    f1, _, _ = forward(p, toks, cfg_u)
+    np.testing.assert_allclose(np.asarray(f1), np.asarray(f0),
+                               rtol=3e-4, atol=3e-4)
+
+
+def test_kv_expand_equivalent(toks):
+    p = init_params(CFG, jax.random.key(0))
+    f0, _, _ = forward(p, toks, CFG)
+    f1, _, _ = forward(p, toks, dataclasses.replace(CFG, attn_kv_expand=True))
+    np.testing.assert_allclose(np.asarray(f1), np.asarray(f0),
+                               rtol=3e-4, atol=3e-4)
+
+
+def test_moe_no_drop_exact_routing():
+    """With no_drop, every token's top-k contribution must be present:
+    compare against a dense loop over experts."""
+    cfg = MOE_CFG
+    p = init_params(cfg, jax.random.key(0))
+    lp = jax.tree.map(lambda a: a[0], p["layers"])
+    x = jax.random.normal(jax.random.key(2), (10, cfg.d_model))
+    out, _ = moe_ffn(x, lp, cfg, no_drop=True)
+
+    logits = x @ lp["router"]
+    probs = jax.nn.softmax(logits, -1)
+    gates, idx = jax.lax.top_k(probs, cfg.top_k)
+    ref = jnp.zeros_like(x)
+    for e in range(cfg.n_experts):
+        h = jax.nn.silu(x @ lp["we_gate"][e]) * (x @ lp["we_up"][e])
+        y_e = h @ lp["we_down"][e]
+        w = jnp.where(idx == e, gates, 0).sum(-1)
+        ref = ref + w[:, None] * y_e
+    shared = jax.nn.silu(x @ lp["ws_gate"]) * (x @ lp["ws_up"]) @ lp["ws_down"]
+    shared = shared * jax.nn.sigmoid(x @ lp["shared_gate"])
+    ref = ref + shared
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_moe_load_balance_loss_positive():
+    cfg = MOE_CFG
+    p = init_params(cfg, jax.random.key(0))
+    lp = jax.tree.map(lambda a: a[0], p["layers"])
+    x = jax.random.normal(jax.random.key(3), (64, cfg.d_model))
+    _, lb = moe_ffn(x, lp, cfg)
+    assert float(lb) > 0
+
+
+@pytest.mark.parametrize("arch_id,expected_m", [
+    ("smollm-360m", 360), ("qwen2-1.5b", 1540), ("stablelm-1.6b", 1640),
+    ("qwen2-moe-a2.7b", 14300), ("dbrx-132b", 132_000),
+])
+def test_param_counts_match_public_figures(arch_id, expected_m):
+    cfg = get_arch(arch_id).make_config()
+    n = cfg.n_params() / 1e6
+    assert abs(n - expected_m) / expected_m < 0.12, f"{arch_id}: {n:.0f}M"
+
+
+def test_active_params_moe():
+    cfg = get_arch("qwen2-moe-a2.7b").make_config()
+    active = cfg.n_active_params() / 1e9
+    assert 2.0 < active < 3.5  # "A2.7B"

@@ -1,0 +1,102 @@
+"""ParaGrapher API (paper §II-A): full/partition/async loading, formats."""
+
+import numpy as np
+import pytest
+
+from repro.core import paragrapher as pg
+from repro.core.csr import csr_from_edges
+from tests._prop import prop
+
+
+@pytest.fixture(params=["compbin", "webgraph"])
+def graph_file(request, tmp_path):
+    rng = np.random.default_rng(3)
+    nv, ne = 2000, 16000
+    csr = csr_from_edges(rng.integers(0, nv, ne), rng.integers(0, nv, ne),
+                         nv, dedupe=True)
+    path = tmp_path / f"g.{request.param}"
+    pg.save_graph(path, csr, format=request.param)
+    return str(path), csr, request.param
+
+
+def test_format_autodetect(graph_file):
+    path, csr, fmt = graph_file
+    g = pg.open_graph(path)
+    assert g.format == fmt
+    assert (g.n_vertices, g.n_edges) == (csr.n_vertices, csr.n_edges)
+    g.close()
+
+
+def test_read_full_and_partition(graph_file):
+    path, csr, _ = graph_file
+    with pg.open_graph(path) as g:
+        full = g.read_full()
+        assert np.array_equal(full.offsets, csr.offsets)
+        np.testing.assert_array_equal(full.neighbors.astype(np.int64),
+                                      csr.neighbors.astype(np.int64))
+        offs, nbrs = g.read_partition(17, 1333)
+        exp = csr.neighbors[csr.offsets[17]:csr.offsets[1333]]
+        np.testing.assert_array_equal(nbrs.astype(np.int64), exp.astype(np.int64))
+        assert offs[-1] == len(nbrs)
+
+
+def test_async_read_covers_all_partitions(graph_file):
+    path, csr, _ = graph_file
+    with pg.open_graph(path, use_pgfuse=True, pgfuse_block_size=8192) as g:
+        plan = g.partition_plan(9)
+        assert plan[0][0] == 0 and plan[-1][1] == csr.n_vertices
+        assert all(a < b for a, b in plan)
+        got = {}
+
+        def cb(buf):
+            assert buf.error is None
+            got[(buf.v0, buf.v1)] = buf.neighbors.copy()
+
+        ar = g.read_async(plan, cb, n_buffers=2, n_workers=3)
+        ar.wait(60)
+        assert ar.done
+        joined = np.concatenate([got[p] for p in sorted(got)])
+        np.testing.assert_array_equal(joined.astype(np.int64),
+                                      csr.neighbors.astype(np.int64))
+        st = g.pgfuse_stats()
+        assert st is not None and st.cache_hits > 0
+
+
+def test_async_error_surfaces(graph_file):
+    path, _, _ = graph_file
+    with pg.open_graph(path) as g:
+        def bad_cb(buf):
+            raise RuntimeError("consumer exploded")
+
+        ar = g.read_async([(0, 10)], bad_cb)
+        with pytest.raises(RuntimeError, match="consumer exploded"):
+            ar.wait(30)
+
+
+def test_closed_graph_rejects_reads(graph_file):
+    path, _, _ = graph_file
+    g = pg.open_graph(path)
+    g.close()
+    with pytest.raises(ValueError):
+        g.read_full()
+
+
+@prop(5)
+def test_partition_plan_edge_balance(draw):
+    import tempfile, os
+    nv = draw.int(100, 3000)
+    ne = draw.int(nv, 20000)
+    csr = csr_from_edges(draw.ints(0, nv - 1, ne), draw.ints(0, nv - 1, ne),
+                         nv, dedupe=True)
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "g.cbin")
+        pg.save_graph(path, csr, format="compbin")
+        with pg.open_graph(path) as g:
+            n_parts = draw.int(2, 16)
+            plan = g.partition_plan(n_parts)
+            sizes = [int(csr.offsets[b] - csr.offsets[a]) for a, b in plan]
+            assert sum(sizes) == csr.n_edges
+            # no partition grossly above the fair share (+1 vertex slack)
+            fair = csr.n_edges / len(plan)
+            max_deg = int(np.max(csr.degrees())) if csr.n_edges else 0
+            assert max(sizes) <= fair + max_deg + 1

@@ -1,0 +1,41 @@
+"""Hybrid format policy (paper Fig. 4 crossover)."""
+
+import numpy as np
+
+from repro.core import policy
+
+
+def test_choose_format_small_graph_prefers_compbin():
+    # fast storage + slow webgraph decode -> CompBin wins
+    m = policy.SystemModel(storage_bw=2e9, compbin_decode_rate=5e8,
+                           webgraph_decode_rate=2e6)
+    assert policy.choose_format(10_000, 100_000, webgraph_size=50_000,
+                                model=m) == "compbin"
+
+
+def test_choose_format_large_compressed_graph_prefers_webgraph():
+    # slow storage + well-compressed webgraph (eu-2015 regime)
+    m = policy.SystemModel(storage_bw=2e7, compbin_decode_rate=5e8,
+                           webgraph_decode_rate=1e8)
+    n_v, n_e = 2**31, 10**9
+    from repro.core import compbin
+    wg_size = int(0.05 * compbin.compbin_nbytes(n_v, n_e))
+    assert policy.choose_format(n_v, n_e, webgraph_size=wg_size,
+                                model=m) == "webgraph"
+
+
+def test_crossover_grows_with_storage_bw():
+    """Faster storage pushes the crossover UP (paper §V-D: thresholds are
+    system dependent): with more read bandwidth, CompBin's fat reads cost
+    less, so WebGraph needs a bigger size advantage to win."""
+    slow = policy.SystemModel(storage_bw=1e8)
+    fast = policy.SystemModel(storage_bw=1e10)
+    n_e, n_v = 10**8, 10**7
+    assert (policy.crossover_size_difference(fast, n_e, n_v)
+            > policy.crossover_size_difference(slow, n_e, n_v))
+
+
+def test_calibrate_measures_sane_rates():
+    m = policy.calibrate(n_vertices=1 << 12, n_edges=1 << 14)
+    assert m.compbin_decode_rate > m.webgraph_decode_rate  # the paper's premise
+    assert m.storage_bw > 0

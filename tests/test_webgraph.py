@@ -1,0 +1,95 @@
+"""WebGraph-style codec (paper §II-A): codes, roundtrip, decoders agree."""
+
+import io
+
+import numpy as np
+import pytest
+
+from repro.core import webgraph as wg
+from repro.core.csr import csr_from_edges
+from tests._prop import prop
+
+
+def test_gamma_known_values():
+    # gamma(1)=1, gamma(2)=010, gamma(3)=011, gamma(4)=00100
+    pats, bits = wg.gamma_code(np.array([1, 2, 3, 4], np.uint64))
+    assert list(bits) == [1, 3, 3, 5]
+    assert list(pats) == [1, 2, 3, 4]
+
+
+def test_zeta3_known_value():
+    # Boldi-Vigna: zeta_3(1) = 100 (unary '1' + minimal binary '00')
+    pat, bits = wg.zeta_code(np.array([1], np.uint64), 3)
+    assert bits[0] == 3 and pat[0] == 0b100
+
+
+@prop()
+def test_code_roundtrip_via_bitreader(draw):
+    k = draw.choice([1, 2, 3, 4])
+    vals = draw.rng.integers(1, 10**6, 200).astype(np.uint64)
+    use_gamma = draw.bool()
+    pats, nbits = (wg.gamma_code(vals) if use_gamma else wg.zeta_code(vals, k))
+    packed, starts = wg.pack_codes(pats, nbits)
+    bits = np.unpackbits(packed)
+    rd = wg.BitReader(bits)
+    for v in vals:
+        got = rd.read_gamma() if use_gamma else rd.read_zeta(k)
+        assert got == v
+
+
+@prop(10)
+def test_graph_roundtrip(draw):
+    nv = draw.int(2, 3000)
+    ne = draw.int(0, 12000)
+    csr = csr_from_edges(draw.ints(0, nv - 1, ne), draw.ints(0, nv - 1, ne),
+                         nv, dedupe=True)
+    blob = wg.roundtrip_bytes(csr)
+    got = wg.read_webgraph(io.BytesIO(blob))
+    assert np.array_equal(got.offsets, csr.offsets)
+    np.testing.assert_array_equal(got.neighbors.astype(np.int64),
+                                  csr.neighbors.astype(np.int64))
+
+
+@prop(5)
+def test_scalar_oracle_matches_wavefront(draw):
+    nv = draw.int(2, 500)
+    ne = draw.int(0, 3000)
+    csr = csr_from_edges(draw.ints(0, nv - 1, ne), draw.ints(0, nv - 1, ne),
+                         nv, dedupe=True)
+    f = wg.WebGraphFile(io.BytesIO(wg.roundtrip_bytes(csr)))
+    for v in draw.ints(0, nv - 1, 8):
+        np.testing.assert_array_equal(f.neighbors_of(int(v)),
+                                      csr.neighbors_of(int(v)).astype(np.int64))
+
+
+@prop(5)
+def test_partition_read(draw):
+    nv = draw.int(10, 1000)
+    ne = draw.int(10, 5000)
+    csr = csr_from_edges(draw.ints(0, nv - 1, ne), draw.ints(0, nv - 1, ne),
+                         nv, dedupe=True)
+    f = wg.WebGraphFile(io.BytesIO(wg.roundtrip_bytes(csr)))
+    v0 = draw.int(0, nv - 1)
+    v1 = draw.int(v0, nv)
+    offs, nbrs = f.read_partition(v0, v1)
+    exp = csr.neighbors[csr.offsets[v0]:csr.offsets[v1]]
+    np.testing.assert_array_equal(nbrs, exp.astype(np.int64))
+
+
+def test_duplicate_edges_rejected():
+    csr = csr_from_edges(np.array([0, 0]), np.array([1, 1]), 3)
+    with pytest.raises(ValueError, match="dedupe"):
+        wg.roundtrip_bytes(csr)
+
+
+def test_compression_beats_compbin_on_locality():
+    """Web-like graphs (consecutive neighbor runs) compress well — the
+    regime where the paper keeps WebGraph+PG-Fuse over CompBin."""
+    from repro.core import compbin
+    nv = 4096
+    src = np.repeat(np.arange(nv), 16)
+    dst = (src + np.tile(np.arange(1, 17), nv)) % nv  # tight local runs
+    csr = csr_from_edges(src, dst, nv, dedupe=True)
+    wg_size = len(wg.roundtrip_bytes(csr))
+    cb_size = len(compbin.roundtrip_bytes(csr))
+    assert wg_size < cb_size
