@@ -116,3 +116,86 @@ def load_compbin(path: str, profile: str = "lustre_ssd",
     dt = _timed_decode(rd, decode_parallelism)
     rd.close()
     return LoadResult(storage.charged_s, dt, storage.requests, storage.bytes)
+
+
+def load_streaming(path: str, profile: str = "lustre_ssd",
+                   block_size: int = PGFUSE_BLOCK,
+                   readahead: int = 2, n_parts: int = 16,
+                   n_buffers: int = 2):
+    """The streaming partition->device loader (data/graph_stream.py).
+
+    Storage is charged through the same SimStorage virtual clock as the
+    host loaders; decode happens in the Pallas kernel on device, so
+    ``decode_s`` here is measured device time (no /128 host-parallelism
+    rescale).  Returns (LoadResult, StreamStats).
+    """
+    from repro.core import paragrapher
+    from repro.data.graph_stream import stream_partitions
+
+    storage = SimStorage(PROFILES[profile])
+    g = paragrapher.open_graph(
+        path, use_pgfuse=True, pgfuse_block_size=block_size,
+        pgfuse_readahead=readahead, pgfuse_pread_fn=storage.pread)
+    try:
+        with stream_partitions(g, None, n_buffers=n_buffers,
+                               readahead=readahead, n_parts=n_parts) as stream:
+            for _ in stream:
+                pass
+            stats = stream.stats
+    finally:
+        g.close()
+    return (LoadResult(storage.charged_s, stats.decode_s,
+                       storage.requests, storage.bytes), stats)
+
+
+def _bench_streaming_main() -> None:
+    """Emit a BENCH json line for the streaming loader vs the host path.
+
+        PYTHONPATH=src python -m benchmarks.loading [--scale 16] [--edge-factor 24]
+    """
+    import argparse
+    import json
+    import os
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workdir", default="/tmp/repro_bench_stream")
+    ap.add_argument("--profile", default="lustre_ssd",
+                    choices=sorted(PROFILES))
+    ap.add_argument("--scale", type=int, default=16)
+    ap.add_argument("--edge-factor", type=int, default=24)
+    ap.add_argument("--readahead", type=int, default=2)
+    ap.add_argument("--n-parts", type=int, default=16)
+    args = ap.parse_args()
+    os.makedirs(args.workdir, exist_ok=True)
+
+    from repro.core import paragrapher
+    from repro.graph import rmat
+
+    path = os.path.join(args.workdir,
+                        f"rmat{args.scale}x{args.edge_factor}.cbin")
+    if not os.path.exists(path):
+        csr = rmat(args.scale, args.edge_factor, seed=0)
+        paragrapher.save_graph(path, csr, format="compbin")
+
+    host = load_compbin(path, args.profile, use_pgfuse=True,
+                        decode_parallelism=1)
+    res, stats = load_streaming(path, args.profile,
+                                readahead=args.readahead,
+                                n_parts=args.n_parts)
+    print("BENCH " + json.dumps({
+        "bench": "streaming_loader",
+        "profile": args.profile,
+        "graph": {"scale": args.scale, "edge_factor": args.edge_factor,
+                  "edges": stats.edges, "vertices": stats.vertices},
+        "streaming": {"io_s": res.io_s, "decode_s": res.decode_s,
+                      "total_s": res.total_s, "requests": res.requests,
+                      "bytes_read": res.bytes_read, **stats.as_dict()},
+        "host_pgfuse": {"io_s": host.io_s, "decode_s": host.decode_s,
+                        "total_s": host.total_s, "requests": host.requests,
+                        "bytes_read": host.bytes_read},
+        "h2d_saving": 1.0 - stats.bytes_h2d / max(1, 4 * stats.edges),
+    }))
+
+
+if __name__ == "__main__":
+    _bench_streaming_main()

@@ -20,7 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import paragrapher
-from repro.data import PrefetchIterator
+from repro.data import PrefetchIterator, assemble_csr, stream_partitions
 from repro.graph import NeighborSampler, rmat
 from repro.launch.data_gnn import block_to_batch
 from repro.models.gnn import gcn
@@ -42,8 +42,28 @@ def main() -> None:
         print(f"wrote {os.path.getsize(path)/2**20:.1f} MiB CompBin graph")
 
     g = paragrapher.open_graph(path, use_pgfuse=True,
-                               pgfuse_block_size=1 << 20)
-    sampler = NeighborSampler(g, fanouts=(10, 5), seed=0)
+                               pgfuse_block_size=1 << 20,
+                               pgfuse_readahead=2)
+
+    # Load the graph through the streaming partition->device pipeline
+    # (data/graph_stream.py): packed bytes go straight to the accelerator,
+    # the Pallas kernel decodes them there, and the sampler's hot loop then
+    # runs over the reassembled in-memory CSR instead of re-reading storage
+    # for every minibatch.
+    with stream_partitions(g, None, n_buffers=2, readahead=2) as stream:
+        shards = list(stream)
+    st = stream.stats
+    print(f"streamed {st.partitions} partitions, {st.edges:,} edges "
+          f"[{st.decode_mode} decode] in {st.wall_s:.2f}s: "
+          f"{st.underlying_reads} storage reads, {st.cache_hits} cache hits, "
+          f"{st.bytes_h2d/2**20:.1f} MiB H2D, "
+          f"{st.host_decode_bytes} host-decoded bytes, "
+          f"{st.decode_edges_per_s/1e3:.0f}k edges/s decode")
+    csr_mem = assemble_csr(shards)
+    pg_stats = g.pgfuse_stats()
+    n_vertices = g.n_vertices
+    g.close()  # graph now lives in memory; free the fd and block cache
+    sampler = NeighborSampler(csr_mem, fanouts=(10, 5), seed=0)
     cfg = gcn.GCNConfig(n_layers=2, d_hidden=32, d_in=32, n_classes=8)
     params = gcn.init_params(cfg, jax.random.key(0))
     opt_cfg = AdamWConfig(lr=3e-3, warmup_steps=10, total_steps=args.steps)
@@ -53,7 +73,7 @@ def main() -> None:
 
     def batches():
         while True:
-            seeds = rng.integers(0, g.n_vertices, args.batch_nodes)
+            seeds = rng.integers(0, n_vertices, args.batch_nodes)
             yield block_to_batch("gcn-cora", cfg, sampler.sample(seeds), rng)
 
     @jax.jit
@@ -69,13 +89,11 @@ def main() -> None:
         if i % 10 == 0:
             print(f"step {i:4d} loss {float(loss):.4f}")
     dt = time.time() - t0
-    st = g.pgfuse_stats()
     print(f"\n{args.steps} steps in {dt:.1f}s "
           f"({args.steps/dt:.1f} steps/s, sampler overlapped via prefetch)")
-    print(f"PG-Fuse: {st.underlying_reads} underlying reads, "
-          f"{st.cache_hits:,} cache hits "
-          f"({st.cache_hits/(st.cache_hits+st.cache_misses):.1%} hit rate)")
-    g.close()
+    print(f"PG-Fuse (load phase): {pg_stats.underlying_reads} underlying "
+          f"reads, {pg_stats.cache_hits:,} cache hits, "
+          f"{pg_stats.readahead_blocks} readahead blocks")
 
 
 if __name__ == "__main__":

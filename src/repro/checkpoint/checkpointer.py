@@ -53,7 +53,7 @@ def _from_saved(arr: np.ndarray, dtype_str: str) -> np.ndarray:
 
 
 def _flatten_with_paths(tree: Any) -> tuple[list[tuple[str, Any]], Any]:
-    flat, treedef = jax.tree.flatten_with_path(tree)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     out = []
     for path, leaf in flat:
         key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)

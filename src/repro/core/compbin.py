@@ -42,6 +42,7 @@ import io
 import math
 import os
 import struct
+import threading
 from typing import BinaryIO, Optional, Union
 
 import numpy as np
@@ -55,6 +56,26 @@ FLAG_SORTED = 1
 
 _HEADER_STRUCT = struct.Struct("<4sHBBQQ")
 assert _HEADER_STRUCT.size == HEADER_SIZE
+
+# Process-wide host-decode accounting.  The streaming loader's claim is that
+# for CompBin inputs ZERO bytes are decoded on the host (eq. (1) runs in the
+# Pallas kernel instead); this counter is how that claim is asserted.
+_host_decode_lock = threading.Lock()
+_host_decoded_bytes = 0
+
+
+def host_decoded_bytes() -> int:
+    """Total packed bytes decoded BY THE HOST (via :func:`decode_ids`)."""
+    with _host_decode_lock:
+        return _host_decoded_bytes
+
+
+def reset_host_decoded_bytes() -> int:
+    """Zero the counter; returns the previous value (tests/stats deltas)."""
+    global _host_decoded_bytes
+    with _host_decode_lock:
+        prev, _host_decoded_bytes = _host_decoded_bytes, 0
+        return prev
 
 
 def bytes_per_vertex(n_vertices: int) -> int:
@@ -92,6 +113,9 @@ def decode_ids(packed: np.ndarray, b: int) -> np.ndarray:
     packed = np.ascontiguousarray(packed, dtype=np.uint8)
     if packed.size % b:
         raise ValueError(f"packed length {packed.size} not a multiple of b={b}")
+    global _host_decoded_bytes
+    with _host_decode_lock:
+        _host_decoded_bytes += packed.size
     cols = packed.reshape(-1, b)
     out_dtype = np.uint32 if b <= 4 else np.uint64
     acc = np.zeros(cols.shape[0], dtype=out_dtype)

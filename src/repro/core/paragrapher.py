@@ -53,7 +53,9 @@ class PartitionBuffer:
     v0: int = 0
     v1: int = 0
     offsets: Optional[np.ndarray] = None    # local, rebased to 0
-    neighbors: Optional[np.ndarray] = None
+    neighbors: Optional[np.ndarray] = None  # decoded IDs (raw=False)
+    packed: Optional[np.ndarray] = None     # undecoded CompBin bytes (raw=True)
+    b: int = 0                              # bytes/ID of ``packed``
     error: Optional[BaseException] = None
 
 
@@ -64,7 +66,9 @@ class GraphHandle:
                  format: str = "auto",
                  use_pgfuse: bool = False,
                  pgfuse_block_size: int = pgfuse.DEFAULT_BLOCK_SIZE,
-                 pgfuse_max_resident_bytes: Optional[int] = None):
+                 pgfuse_max_resident_bytes: Optional[int] = None,
+                 pgfuse_readahead: int = 0,
+                 pgfuse_pread_fn=None):
         self.path = os.fspath(path)
         self.format = detect_format(path) if format == "auto" else format
         self._fs: Optional[pgfuse.PGFuseFS] = None
@@ -72,12 +76,16 @@ class GraphHandle:
             self._fs = pgfuse.PGFuseFS(
                 block_size=pgfuse_block_size,
                 max_resident_bytes=pgfuse_max_resident_bytes,
+                readahead=pgfuse_readahead,
+                pread_fn=pgfuse_pread_fn,
             )
             self._fs.mount(self.path)
         self._closed = False
         rdr = self._reader()  # validates header eagerly
         self.n_vertices = rdr.n_vertices
         self.n_edges = rdr.n_edges
+        # CompBin bytes/ID (paper §IV); 0 for formats without fixed-width IDs
+        self.bytes_per_id = rdr.b if isinstance(rdr, compbin.CompBinFile) else 0
         rdr.close()
 
     # -- internals ----------------------------------------------------------
@@ -114,6 +122,30 @@ class GraphHandle:
         finally:
             rdr.close()
 
+    def read_partition_raw(self, v0: int, v1: int
+                           ) -> tuple[np.ndarray, np.ndarray, int]:
+        """Like :meth:`read_partition` but WITHOUT host decode: returns
+        (rebased offsets, packed neighbor bytes, bytes-per-ID).
+
+        Only CompBin supports this — its packed stream is decodable on
+        device (kernels/compbin_decode), so the (4-b)/4 byte saving extends
+        to the host->device transfer.  WebGraph's bit-level codes need the
+        sequential host decoder; callers should route through
+        :func:`repro.core.policy.choose_stream_decode`.
+        """
+        if not 0 <= v0 <= v1 <= self.n_vertices:
+            raise ValueError(f"bad partition [{v0},{v1}) for |V|={self.n_vertices}")
+        rdr = self._reader()
+        try:
+            if not isinstance(rdr, compbin.CompBinFile):
+                raise ValueError(
+                    f"raw partition reads require CompBin, not {self.format!r}")
+            offs = rdr.offsets(v0, v1)
+            raw = rdr.raw_neighbor_bytes(int(offs[0]), int(offs[-1]))
+            return (offs - offs[0]).astype(np.int64), raw, rdr.b
+        finally:
+            rdr.close()
+
     def neighbors_of(self, v: int) -> np.ndarray:
         rdr = self._reader()
         try:
@@ -129,13 +161,18 @@ class GraphHandle:
         *,
         n_buffers: int = 4,
         n_workers: int = 4,
+        raw: bool = False,
     ) -> "AsyncRead":
         """Decode ``partitions`` concurrently; invoke ``callback(buffer)`` for
         each as it completes (possibly out of order).  The pool of
         ``n_buffers`` bounds memory and applies backpressure: producers block
-        until the consumer returns a buffer (i.e. the callback finishes)."""
+        until the consumer returns a buffer (i.e. the callback finishes).
+
+        ``raw=True`` (CompBin only) skips host decode: each buffer carries
+        ``packed``/``b`` instead of ``neighbors`` — the streaming loader's
+        storage stage (data/graph_stream.py)."""
         return AsyncRead(self, list(partitions), callback,
-                         n_buffers=n_buffers, n_workers=n_workers)
+                         n_buffers=n_buffers, n_workers=n_workers, raw=raw)
 
     def partition_plan(self, n_parts: int) -> list[tuple[int, int]]:
         """Edge-balanced contiguous vertex ranges (for distributed loaders)."""
@@ -179,9 +216,10 @@ class AsyncRead:
 
     def __init__(self, g: GraphHandle, partitions: list[tuple[int, int]],
                  callback: Callable[[PartitionBuffer], None], *,
-                 n_buffers: int, n_workers: int):
+                 n_buffers: int, n_workers: int, raw: bool = False):
         self._g = g
         self._callback = callback
+        self._raw = raw
         self._work: "queue.Queue[Optional[tuple[int,int]]]" = queue.Queue()
         self._pool: "queue.Queue[PartitionBuffer]" = queue.Queue()
         for _ in range(max(1, n_buffers)):
@@ -193,6 +231,7 @@ class AsyncRead:
         if not partitions:
             self._done.set()
         self._cb_lock = threading.Lock()
+        self._err_lock = threading.Lock()
         self._errors: list[BaseException] = []
         self._threads = [
             threading.Thread(target=self._producer, daemon=True,
@@ -202,6 +241,10 @@ class AsyncRead:
         for t in self._threads:
             t.start()
 
+    def _record_error(self, e: BaseException) -> None:
+        with self._err_lock:  # producers race here; list.append alone is not
+            self._errors.append(e)  # a guaranteed atomic publication point
+
     def _producer(self) -> None:
         while True:
             try:
@@ -210,19 +253,26 @@ class AsyncRead:
                 return
             buf = self._pool.get()  # backpressure: wait for a free buffer
             try:
-                offs, nbrs = self._g.read_partition(*part)
                 buf.v0, buf.v1 = part
-                buf.offsets, buf.neighbors, buf.error = offs, nbrs, None
+                if self._raw:
+                    offs, packed, b = self._g.read_partition_raw(*part)
+                    buf.offsets, buf.packed, buf.b = offs, packed, b
+                    buf.neighbors = None
+                else:
+                    offs, nbrs = self._g.read_partition(*part)
+                    buf.offsets, buf.neighbors = offs, nbrs
+                    buf.packed = None
+                buf.error = None
             except BaseException as e:  # surfaced via wait()
                 buf.error = e
-                self._errors.append(e)
+                self._record_error(e)
             try:
                 with self._cb_lock:
                     self._callback(buf)
             except BaseException as e:
-                self._errors.append(e)
+                self._record_error(e)
             finally:
-                buf.offsets = buf.neighbors = None  # buffer returns to pool
+                buf.offsets = buf.neighbors = buf.packed = None  # -> pool
                 self._pool.put(buf)
                 if self._decr() == 0:
                     self._done.set()
@@ -235,8 +285,9 @@ class AsyncRead:
     def wait(self, timeout: Optional[float] = None) -> None:
         if not self._done.wait(timeout):
             raise TimeoutError("async read did not complete in time")
-        if self._errors:
-            raise self._errors[0]
+        with self._err_lock:
+            if self._errors:
+                raise self._errors[0]
 
     @property
     def done(self) -> bool:
@@ -246,16 +297,23 @@ class AsyncRead:
 def open_graph(path: Union[str, os.PathLike], *, format: str = "auto",
                use_pgfuse: bool = False,
                pgfuse_block_size: int = pgfuse.DEFAULT_BLOCK_SIZE,
-               pgfuse_max_resident_bytes: Optional[int] = None) -> GraphHandle:
+               pgfuse_max_resident_bytes: Optional[int] = None,
+               pgfuse_readahead: int = 0,
+               pgfuse_pread_fn=None) -> GraphHandle:
     """Open a graph for loading (the ParaGrapher entry point).
 
     ``use_pgfuse=True`` mounts the file in the PG-Fuse block cache
     (paper §III); ``format`` is auto-detected from the magic by default.
+    ``pgfuse_readahead`` loads that many extra blocks per miss in one
+    enlarged request (sequential-scan prefetch for the streaming loader);
+    ``pgfuse_pread_fn`` injects a storage backend (benchmarks/tests).
     """
     return GraphHandle(
         path, format=format, use_pgfuse=use_pgfuse,
         pgfuse_block_size=pgfuse_block_size,
         pgfuse_max_resident_bytes=pgfuse_max_resident_bytes,
+        pgfuse_readahead=pgfuse_readahead,
+        pgfuse_pread_fn=pgfuse_pread_fn,
     )
 
 

@@ -57,6 +57,7 @@ class PGFuseStats:
     waits: int = 0                 # acquisitions that had to wait (-2/-3)
     evictions: int = 0             # blocks revoked
     bytes_served: int = 0          # bytes returned to consumers
+    readahead_blocks: int = 0      # blocks loaded ahead of any request
 
     def merge(self, other: "PGFuseStats") -> None:
         for f in dataclasses.fields(self):
@@ -114,11 +115,15 @@ class CachedFile:
     def __init__(self, path: Union[str, os.PathLike], *,
                  block_size: int = DEFAULT_BLOCK_SIZE,
                  fs: Optional["PGFuseFS"] = None,
-                 pread_fn=None):
+                 pread_fn=None,
+                 readahead: int = 0):
         self.path = os.fspath(path)
         self.block_size = int(block_size)
+        self.readahead = int(readahead)
         if self.block_size <= 0:
             raise ValueError("block_size must be positive")
+        if self.readahead < 0:
+            raise ValueError("readahead must be >= 0")
         self._fd = os.open(self.path, os.O_RDONLY)
         self.size = os.fstat(self._fd).st_size
         # injectable storage backend (benchmarks emulate Lustre/HDD
@@ -127,6 +132,12 @@ class CachedFile:
         self.n_blocks = max(1, -(-self.size // self.block_size))
         self._statuses = _StatusArray(self.n_blocks)
         self._blocks: list[Optional[bytes]] = [None] * self.n_blocks
+        # index of blocks with data installed, so eviction scans O(resident)
+        # candidates instead of O(n_blocks) — release_block runs this on
+        # every call when the cache sits at its budget (the streaming
+        # loader's steady state)
+        self._resident_set: set[int] = set()
+        self._resident_lock = threading.Lock()
         self._last_access = np.zeros(self.n_blocks, dtype=np.float64)
         self._cond = threading.Condition()
         self.stats = PGFuseStats()
@@ -135,19 +146,37 @@ class CachedFile:
         self._closed = False
 
     # -- block acquisition (Fig. 1) ---------------------------------------
-    def _read_underlying(self, b: int) -> bytes:
-        off = b * self.block_size
-        n = min(self.block_size, self.size - off)
+    def _read_underlying_range(self, b0: int, n_blocks: int) -> bytes:
+        off = b0 * self.block_size
+        n = min(n_blocks * self.block_size, self.size - off)
         data = self._pread_fn(self._fd, n, off)  # ONE large-granularity request
         with self._stats_lock:
             self.stats.underlying_reads += 1
             self.stats.underlying_bytes += len(data)
         return data
 
+    def _claim_readahead(self, b: int) -> list[int]:
+        """Claim (-1 -> -2) a contiguous run [b, b+1, ...] for one load.
+
+        Sequential readahead (paper §III read-ahead prefetchers): a miss on
+        block ``b`` also claims up to ``readahead`` following NOT_LOADED
+        blocks so the whole run is fetched with a single enlarged request —
+        partition scans then issue ~1/(1+readahead) underlying calls.
+        """
+        claimed = [b]
+        nxt = b + 1
+        while (len(claimed) <= self.readahead and nxt < self.n_blocks
+               and self._statuses.cas(nxt, NOT_LOADED, LOADING)):
+            claimed.append(nxt)
+            nxt += 1
+        return claimed
+
     def acquire_block(self, b: int) -> bytes:
         """Pin block ``b`` for reading, loading it if necessary."""
         waited = False
         while True:
+            if self._closed:
+                raise ValueError("acquire on closed CachedFile")
             if self._statuses.add_reader(b):          # s >= 0 -> s+1
                 data = self._blocks[b]
                 assert data is not None
@@ -157,27 +186,54 @@ class CachedFile:
                         self.stats.waits += 1
                 return data
             if self._statuses.cas(b, NOT_LOADED, LOADING):  # -1 -> -2
+                claimed = self._claim_readahead(b)
+                if self._closed:
+                    # close() raced our claim: it is now waiting for these
+                    # LOADING blocks before os.close(fd), so revert the
+                    # claims rather than pread a to-be-closed descriptor
+                    for c in claimed:
+                        ok = self._statuses.cas(c, LOADING, NOT_LOADED)
+                        assert ok
+                    with self._cond:
+                        self._cond.notify_all()
+                    raise ValueError("acquire on closed CachedFile")
                 try:
-                    data = self._read_underlying(b)
+                    run = self._read_underlying_range(b, len(claimed))
                 except BaseException:
-                    ok = self._statuses.cas(b, LOADING, NOT_LOADED)
-                    assert ok
+                    for c in claimed:
+                        ok = self._statuses.cas(c, LOADING, NOT_LOADED)
+                        assert ok
                     with self._cond:
                         self._cond.notify_all()
                     raise
-                self._blocks[b] = data
-                self._last_access[b] = time.monotonic()
-                if self._fs is not None:
-                    self._fs._resident_delta(len(data))
-                ok = self._statuses.cas(b, LOADING, 1)  # loader is reader #1
-                assert ok, "nobody else may touch a LOADING block"
+                now = time.monotonic()
+                installed_ahead = 0
+                for j, c in enumerate(claimed):
+                    expected = min(self.block_size, self.size - c * self.block_size)
+                    chunk = run[j * self.block_size : j * self.block_size + expected]
+                    if c != b and len(chunk) < expected:
+                        # short underlying read: drop the readahead block
+                        ok = self._statuses.cas(c, LOADING, NOT_LOADED)
+                        assert ok
+                        continue
+                    self._blocks[c] = chunk
+                    with self._resident_lock:
+                        self._resident_set.add(c)
+                    self._last_access[c] = now
+                    if self._fs is not None:
+                        self._fs._resident_delta(len(chunk))
+                    # loader becomes reader #1 of b; readahead blocks go idle
+                    ok = self._statuses.cas(c, LOADING, 1 if c == b else LOADED)
+                    assert ok, "nobody else may touch a LOADING block"
+                    installed_ahead += c != b
                 with self._stats_lock:
                     self.stats.cache_misses += 1
+                    self.stats.readahead_blocks += installed_ahead
                     if waited:
                         self.stats.waits += 1
                 with self._cond:
                     self._cond.notify_all()
-                return data
+                return self._blocks[b]
             # s is LOADING or REVOKING: wait for the owning thread
             waited = True
             with self._cond:
@@ -187,7 +243,9 @@ class CachedFile:
 
     def release_block(self, b: int) -> None:
         self._last_access[b] = time.monotonic()
-        self._statuses.release_reader(b)
+        if self._statuses.release_reader(b) == 0:
+            with self._cond:
+                self._cond.notify_all()  # close() may be draining readers
         if self._fs is not None:
             self._fs._maybe_evict()
 
@@ -198,6 +256,8 @@ class CachedFile:
             return 0
         data = self._blocks[b]
         self._blocks[b] = None
+        with self._resident_lock:
+            self._resident_set.discard(b)
         freed = len(data) if data is not None else 0
         ok = self._statuses.cas(b, REVOKING, NOT_LOADED)
         assert ok
@@ -208,7 +268,8 @@ class CachedFile:
         return freed
 
     def resident_blocks(self) -> np.ndarray:
-        return np.flatnonzero([blk is not None for blk in self._blocks])
+        with self._resident_lock:
+            return np.array(sorted(self._resident_set), dtype=np.int64)
 
     # -- the consumer-facing read interface --------------------------------
     def pread(self, offset: int, size: int) -> bytes:
@@ -242,19 +303,43 @@ class CachedFile:
         """A seekable file-like handle (one per consumer thread)."""
         return CachedFileHandle(self)
 
-    def close(self) -> None:
+    def close(self, *, drain_timeout: float = 5.0) -> None:
+        """Free every block through the Fig. 1 transitions (0 -> -3 -> -1).
+
+        Pinned (s > 0) or in-flight (-2) blocks are *waited for*, not freed
+        from under their readers — freeing a pinned block hands stale bytes
+        to a thread that legally holds it.  Readers that never release
+        within ``drain_timeout`` are treated as leaked and their blocks
+        reclaimed as a last resort (with resident accounting kept exact).
+        """
         if self._closed:
             return
-        self._closed = True
-        freed = 0
-        for b in range(self.n_blocks):
-            # drain: blocks pinned by leaked readers are freed unconditionally
-            data = self._blocks[b]
-            if data is not None:
-                freed += len(data)
-                self._blocks[b] = None
-        if self._fs is not None and freed:
-            self._fs._resident_delta(-freed)
+        self._closed = True  # new acquisitions now fail fast
+        deadline = time.monotonic() + drain_timeout
+        pending = set(range(self.n_blocks))
+        while pending:
+            for b in list(pending):
+                freed = self.try_revoke(b)  # 0 -> -3 -> free -> -1
+                if freed and self._fs is not None:
+                    self._fs._resident_delta(-freed)
+                if self._statuses.load(b) == NOT_LOADED:
+                    pending.discard(b)
+            if not pending:
+                break
+            if time.monotonic() >= deadline:  # leaked readers: force-free
+                freed = 0
+                for b in pending:
+                    data = self._blocks[b]
+                    if data is not None:
+                        freed += len(data)
+                        self._blocks[b] = None
+                        with self._resident_lock:
+                            self._resident_set.discard(b)
+                if self._fs is not None and freed:
+                    self._fs._resident_delta(-freed)
+                break
+            with self._cond:
+                self._cond.wait(timeout=0.05)
         os.close(self._fd)
 
 
@@ -307,10 +392,12 @@ class PGFuseFS:
 
     def __init__(self, *, block_size: int = DEFAULT_BLOCK_SIZE,
                  max_resident_bytes: Optional[int] = None,
-                 pread_fn=None):
+                 pread_fn=None,
+                 readahead: int = 0):
         self.block_size = block_size
         self.max_resident_bytes = max_resident_bytes
         self.pread_fn = pread_fn
+        self.readahead = int(readahead)
         self._files: Dict[str, CachedFile] = {}
         self._lock = threading.Lock()
         self._resident = 0
@@ -348,7 +435,8 @@ class PGFuseFS:
             cf = self._files.get(key)
             if cf is None:
                 cf = CachedFile(key, block_size=self.block_size, fs=self,
-                                pread_fn=self.pread_fn)
+                                pread_fn=self.pread_fn,
+                                readahead=self.readahead)
                 self._files[key] = cf
             return cf
 

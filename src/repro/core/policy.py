@@ -66,6 +66,44 @@ def crossover_size_difference(model: SystemModel, n_edges: int,
     return extra_decode * model.storage_bw
 
 
+@dataclasses.dataclass
+class StreamDecodePlan:
+    """Where the streaming loader (data/graph_stream.py) runs eq. (1)."""
+
+    mode: str      # "device" (Pallas kernel) | "host" (numpy decode)
+    reason: str
+
+    @property
+    def device(self) -> bool:
+        return self.mode == "device"
+
+
+def choose_stream_decode(format: str, b: int = 0,
+                         model: SystemModel | None = None) -> StreamDecodePlan:
+    """Per-graph decode placement for the streaming loader.
+
+    CompBin with b <= 4 ships the *packed* bytes and decodes on device —
+    the (4-b)/4 byte saving then applies to host->HBM traffic too, and the
+    VPU shift+adds are free next to the gather they feed.  CompBin with
+    b > 4 means |V| >= 2^32: IDs overflow the kernel's int32 lanes, so the
+    host decodes to int64.  WebGraph's gamma/zeta bit codes are inherently
+    sequential (paper §II-A) and always decode on host; whether WebGraph
+    is worth reading at all is :func:`choose_format`'s job, which trades
+    its smaller storage footprint against its ~100x slower decode.
+    """
+    if format == "compbin":
+        if 1 <= b <= 4:
+            return StreamDecodePlan(
+                "device", f"CompBin b={b}: packed stream fits int32 lanes; "
+                          f"H2D moves {b}/4 of the decoded bytes")
+        return StreamDecodePlan(
+            "host", f"CompBin b={b}: IDs exceed int32; host decodes to int64")
+    if format == "webgraph":
+        return StreamDecodePlan(
+            "host", "WebGraph gamma/zeta codes are bit-sequential; no device path")
+    raise ValueError(f"unknown graph format {format!r}")
+
+
 def calibrate(n_vertices: int = 1 << 16, n_edges: int = 1 << 18,
               seed: int = 0) -> SystemModel:
     """Measure decode rates (and a proxy storage bandwidth) on this host."""

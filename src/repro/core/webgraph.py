@@ -221,6 +221,8 @@ def encode_graph(csr: CSR, k: int = DEFAULT_K) -> tuple[np.ndarray, np.ndarray]:
     n_v = csr.n_vertices
     degrees = csr.degrees()
     offsets = csr.offsets
+    if n_v == 0:  # empty graph: no codes, a single zero bit offset
+        return np.zeros(0, dtype=np.uint8), np.zeros(1, dtype=np.int64)
 
     # Sort each row ascending (vectorized: stable sort by (row, neighbor)).
     row = np.repeat(np.arange(n_v, dtype=np.int64), degrees)
@@ -241,8 +243,9 @@ def encode_graph(csr: CSR, k: int = DEFAULT_K) -> tuple[np.ndarray, np.ndarray]:
     is_first = np.zeros(len(nbr), dtype=bool)
     is_first[offsets[:-1][degrees > 0]] = True
     prev = np.empty_like(nbr)
-    prev[1:] = nbr[:-1]
-    prev[0] = 0
+    if len(nbr):  # edge-less graphs still carry their degree codes
+        prev[1:] = nbr[:-1]
+        prev[0] = 0
     first_nat = int2nat(nbr - row)            # first gap: zigzag(n0 - v)
     rest_gap = (nbr - prev - 1).astype(np.uint64)  # subsequent: n_i - n_{i-1} - 1
     nat = np.where(is_first, first_nat, rest_gap)

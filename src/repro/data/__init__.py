@@ -1,3 +1,6 @@
+from repro.data.graph_stream import (GraphStream, StreamedShard,  # noqa: F401
+                                     StreamStats, assemble_csr,
+                                     stream_partitions)
 from repro.data.prefetch import PrefetchIterator  # noqa: F401
 from repro.data.tokens import (TokenShardReader, TokenShardWriter,  # noqa: F401
                                write_token_shard)

@@ -1,0 +1,314 @@
+"""Streaming partition->device graph loader (the paper's loading path,
+carried all the way to the accelerator).
+
+The paper accelerates storage->host loading (PG-Fuse enlarges+caches
+reads, CompBin keeps decode a few shifts-and-adds); this module connects
+that work to the JAX side so the *consumer* of the bandwidth is the
+device, not host RAM:
+
+    GraphHandle.partition_plan          edge-balanced vertex ranges
+      -> read_async over PG-Fuse        producer pool, bounded buffers,
+                                        sequential block readahead
+      -> raw packed neighbor bytes      CompBin: NO host decode
+      -> double-buffered H2D transfer   PrefetchIterator staging thread
+      -> on-device Pallas decode        kernels/compbin_decode, eq. (1)
+      -> per-partition CSR shards       placed on the mesh "data" axis
+
+For CompBin with b <= 4 the packed stream crosses the host->device link
+undecoded, so the (4-b)/4 byte saving the paper claims for storage also
+applies to H2D traffic — the same argument Log(Graph)/Zuckerli make for
+compact representations: judge them by the bandwidth of the consumer
+path.  WebGraph inputs (and CompBin with b > 4, whose IDs overflow int32
+lanes) fall back to host decode; core/policy.py::choose_stream_decode is
+the policy hook that picks the placement per graph.
+
+Entry point::
+
+    stream = stream_partitions(graph, mesh, n_buffers=2, readahead=2)
+    for shard in stream:          # StreamedShard, device-resident
+        ...
+    print(stream.stats)           # per-stage: storage, H2D, decode
+
+The iterator is bounded and backpressured end to end: at most
+``readahead`` partitions sit decoded-or-packed on the host and at most
+``n_buffers`` shards sit staged on device ahead of the consumer; a slow
+consumer stalls the producers through the read_async buffer pool.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import Iterator, Optional
+
+import numpy as np
+
+from repro.core import compbin, pgfuse, policy
+from repro.core.csr import CSR
+from repro.core.paragrapher import GraphHandle, PartitionBuffer
+
+
+@dataclasses.dataclass
+class StreamedShard:
+    """One device-resident CSR partition (vertices [v0, v1))."""
+
+    v0: int
+    v1: int
+    offsets: "jax.Array"      # int64[v1-v0+1], rebased to 0, replicated
+    neighbors: "jax.Array"    # int32[n_edges] on the mesh "data" axis
+    n_edges: int
+
+    @property
+    def n_vertices(self) -> int:
+        return self.v1 - self.v0
+
+
+@dataclasses.dataclass
+class StreamStats:
+    """Per-stage accounting for one stream (printed by benchmarks)."""
+
+    partitions: int = 0
+    vertices: int = 0
+    edges: int = 0
+    decode_mode: str = ""          # "device" | "host"
+    decode_reason: str = ""
+    # storage stage (PG-Fuse deltas; zero when the graph is not mounted)
+    underlying_reads: int = 0
+    underlying_bytes: int = 0
+    cache_hits: int = 0
+    readahead_blocks: int = 0
+    # transfer stage
+    bytes_h2d: int = 0             # bytes shipped host->device (packed!)
+    # decode stage
+    host_decode_bytes: int = 0     # packed bytes decoded on host (0 = all
+    decode_s: float = 0.0          # on-device, the CompBin fast path)
+    wall_s: float = 0.0
+
+    @property
+    def decode_edges_per_s(self) -> float:
+        return self.edges / self.decode_s if self.decode_s > 0 else 0.0
+
+    def as_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["decode_edges_per_s"] = self.decode_edges_per_s
+        return d
+
+
+class GraphStream:
+    """Bounded, backpressured iterator of device-resident CSR shards.
+
+    Use :func:`stream_partitions` to construct.  Safe to abandon early:
+    ``close()`` (also called by ``__exit__`` and on exhaustion) drops the
+    in-flight partitions and unblocks the producer pool.
+    """
+
+    def __init__(self, graph: GraphHandle, mesh=None, *,
+                 n_buffers: int = 2, readahead: int = 2,
+                 n_parts: Optional[int] = None, n_workers: int = 2,
+                 granule: Optional[int] = None,
+                 decode_plan: Optional[policy.StreamDecodePlan] = None):
+        # jax-facing imports are deferred to the staging stage so the
+        # storage layer stays importable without jax
+        from repro.kernels.compbin_decode import STREAM_GRANULE_IDS
+
+        self._graph = graph
+        self._mesh = mesh
+        self._granule = granule or STREAM_GRANULE_IDS
+        self.plan = graph.partition_plan(self._default_parts(n_parts, mesh))
+        self.decode_plan = decode_plan or policy.choose_stream_decode(
+            graph.format, graph.bytes_per_id)
+        self.stats = StreamStats(decode_mode=self.decode_plan.mode,
+                                 decode_reason=self.decode_plan.reason)
+        self._n_expected = len(self.plan)
+        self._closed = False
+        self._drop = threading.Event()   # tells the callback to discard
+        self._t0 = time.perf_counter()
+        self._pg0 = graph.pgfuse_stats() or pgfuse.PGFuseStats()
+        self._pg0 = dataclasses.replace(self._pg0)  # snapshot, not live ref
+        self._host0 = compbin.host_decoded_bytes()
+
+        # stage 1: storage + (for "host" mode) decode, on the producer pool
+        self._rawq: "queue.Queue" = queue.Queue(maxsize=max(1, readahead))
+        self._async = graph.read_async(
+            self.plan, self._on_partition, n_buffers=max(2, n_buffers),
+            n_workers=max(1, n_workers), raw=self.decode_plan.device)
+
+        # stage 2: H2D staging + device decode, on a prefetch thread
+        from repro.data.prefetch import PrefetchIterator
+        self._prefetch: PrefetchIterator = PrefetchIterator(
+            self._raw_iter(), depth=max(1, n_buffers), transform=self._stage)
+
+    @staticmethod
+    def _default_parts(n_parts: Optional[int], mesh) -> int:
+        if n_parts is not None:
+            return max(1, n_parts)
+        if mesh is not None:
+            total = 1
+            for s in mesh.devices.shape:
+                total *= s
+            return max(8, 4 * total)
+        return 8
+
+    # -- stage 1: the read_async consumer callback -------------------------
+    def _on_partition(self, buf: PartitionBuffer) -> None:
+        if self._drop.is_set():
+            return
+        if buf.error is not None:
+            item = ("err", buf.error)
+        elif buf.packed is not None:
+            item = ("raw", (buf.v0, buf.v1, buf.offsets, buf.packed, buf.b))
+        else:
+            item = ("host", (buf.v0, buf.v1, buf.offsets, buf.neighbors))
+        while not self._drop.is_set():
+            try:
+                self._rawq.put(item, timeout=0.05)
+                return
+            except queue.Full:
+                continue
+
+    def _raw_iter(self) -> Iterator:
+        received = 0
+        while received < self._n_expected:
+            try:
+                kind, payload = self._rawq.get(timeout=0.05)
+            except queue.Empty:
+                if self._drop.is_set():
+                    return
+                continue
+            received += 1
+            if kind == "err":
+                raise payload
+            yield (kind, payload)
+
+    # -- stage 2: staging + decode ----------------------------------------
+    def _stage(self, item) -> StreamedShard:
+        import jax
+        import jax.numpy as jnp
+
+        from repro.distributed.sharding import stream_shard_placement
+        from repro.kernels.compbin_decode import (compbin_decode,
+                                                  pad_packed_for_stream)
+
+        kind, payload = item
+        t0 = time.perf_counter()
+        if kind == "raw":
+            v0, v1, offs, packed, b = payload
+            padded, n = pad_packed_for_stream(packed, b, granule=self._granule)
+            nbr_shard, off_shard = stream_shard_placement(self._mesh, len(padded) // b)
+            dev_packed = jnp.asarray(padded)          # H2D: packed bytes only
+            if nbr_shard is not None:
+                dev_packed = jax.device_put(dev_packed, nbr_shard)
+            decoded = compbin_decode(dev_packed, b)   # eq. (1) on device
+            neighbors = decoded[:n]
+            h2d = padded.nbytes
+        else:  # host-decoded partition (WebGraph, or CompBin with b > 4)
+            v0, v1, offs, nbrs = payload
+            n = len(nbrs)
+            dtype = np.int32 if self._graph.n_vertices <= np.iinfo(np.int32).max \
+                else np.int64
+            host_nbrs = np.ascontiguousarray(nbrs, dtype=dtype)
+            nbr_shard, off_shard = stream_shard_placement(self._mesh, n)
+            neighbors = jnp.asarray(host_nbrs)
+            if nbr_shard is not None:
+                neighbors = jax.device_put(neighbors, nbr_shard)
+            h2d = host_nbrs.nbytes
+            if self._graph.format != "compbin":
+                # compbin host decode is tallied by core.compbin itself
+                self.stats.host_decode_bytes += host_nbrs.nbytes
+        offsets = jnp.asarray(offs)
+        if off_shard is not None:
+            offsets = jax.device_put(offsets, off_shard)
+        neighbors.block_until_ready()   # charge decode to this stage, not
+        offsets.block_until_ready()     # to the consumer's first use
+        self.stats.decode_s += time.perf_counter() - t0
+        self.stats.bytes_h2d += h2d + offs.nbytes
+        return StreamedShard(v0=v0, v1=v1, offsets=offsets,
+                             neighbors=neighbors, n_edges=n)
+
+    # -- the consumer-facing iterator --------------------------------------
+    def __iter__(self) -> "GraphStream":
+        return self
+
+    def __next__(self) -> StreamedShard:
+        try:
+            shard = next(self._prefetch)
+        except StopIteration:
+            self._finalize()
+            raise
+        self.stats.partitions += 1
+        self.stats.vertices += shard.n_vertices
+        self.stats.edges += shard.n_edges
+        return shard
+
+    def _finalize(self) -> None:
+        if self.stats.wall_s == 0.0:
+            self.stats.wall_s = time.perf_counter() - self._t0
+        pg = self._graph.pgfuse_stats()
+        if pg is not None:
+            self.stats.underlying_reads = pg.underlying_reads - self._pg0.underlying_reads
+            self.stats.underlying_bytes = pg.underlying_bytes - self._pg0.underlying_bytes
+            self.stats.cache_hits = pg.cache_hits - self._pg0.cache_hits
+            self.stats.readahead_blocks = pg.readahead_blocks - self._pg0.readahead_blocks
+        if self._graph.format == "compbin":
+            self.stats.host_decode_bytes = (
+                compbin.host_decoded_bytes() - self._host0)
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        self._drop.set()
+        self._prefetch.close()
+        while True:  # unblock any producer stuck on a full raw queue
+            try:
+                self._rawq.get_nowait()
+            except queue.Empty:
+                break
+        self._finalize()
+
+    def __enter__(self) -> "GraphStream":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+def stream_partitions(graph: GraphHandle, mesh=None, *,
+                      n_buffers: int = 2, readahead: int = 2,
+                      n_parts: Optional[int] = None, n_workers: int = 2,
+                      granule: Optional[int] = None,
+                      decode_plan: Optional[policy.StreamDecodePlan] = None
+                      ) -> GraphStream:
+    """Stream an open graph to the device(s) partition by partition.
+
+    Parameters mirror the pipeline's three bounds: ``readahead`` partitions
+    may wait decoded/packed on the host, ``n_buffers`` shards may sit on
+    device ahead of the consumer, and the PG-Fuse *block* readahead is set
+    when the graph is opened (``open_graph(pgfuse_readahead=...)``).
+    ``decode_plan`` overrides core.policy's CompBin-vs-WebGraph placement.
+    """
+    return GraphStream(graph, mesh, n_buffers=n_buffers, readahead=readahead,
+                       n_parts=n_parts, n_workers=n_workers, granule=granule,
+                       decode_plan=decode_plan)
+
+
+def assemble_csr(shards: list[StreamedShard]) -> CSR:
+    """Reassemble streamed shards into one host CSR (tests/verification).
+
+    Shards may arrive out of order (read_async completes as storage does);
+    they are keyed by their vertex range.
+    """
+    shards = sorted(shards, key=lambda s: s.v0)
+    offsets = [np.zeros(1, dtype=np.int64)]
+    neighbors = []
+    base = 0
+    for s in shards:
+        offs = np.asarray(s.offsets, dtype=np.int64)
+        offsets.append(offs[1:] + base)
+        base += int(offs[-1])
+        neighbors.append(np.asarray(s.neighbors))
+    nbrs = (np.concatenate(neighbors) if neighbors
+            else np.zeros(0, dtype=np.int32))
+    return CSR(offsets=np.concatenate(offsets), neighbors=nbrs)

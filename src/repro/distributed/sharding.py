@@ -28,6 +28,22 @@ from jax.sharding import PartitionSpec as P
 from repro.models.transformer import TransformerConfig
 
 
+def shard_map(f, *, mesh: Mesh, in_specs, out_specs):
+    """Version-portable shard_map with replication checking off.
+
+    jax >= 0.6 exposes ``jax.shard_map(..., check_vma=False)``; older
+    releases ship it as ``jax.experimental.shard_map`` with the flag named
+    ``check_rep``.  Every caller in this repo wants the check disabled
+    (psum-carrying train steps), so that's baked in.
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=False)
+
+
 def axis_size(mesh: Mesh, name: str) -> int:
     return dict(zip(mesh.axis_names, mesh.devices.shape)).get(name, 1)
 
@@ -124,6 +140,30 @@ def lm_cache_specs(cfg: TransformerConfig, mesh: Mesh, batch: int) -> dict:
     else:
         kv = P(None, b_ax, None, kv_ax, None)
     return {"k": kv, "v": kv, "len": P()}
+
+
+# ---------------------------------------------------------------------------
+# Streamed CSR shards (data/graph_stream.py)
+# ---------------------------------------------------------------------------
+
+def stream_shard_placement(mesh: Optional[Mesh], n_edges: int
+                           ) -> tuple[Optional[NamedSharding],
+                                      Optional[NamedSharding]]:
+    """(neighbors, offsets) shardings for one streamed CSR partition.
+
+    Neighbor arrays are the bulk payload and shard over the ``"data"`` axis
+    (edge-parallel consumers: gather/segment-sum in models/gnn); the small
+    per-partition offset arrays replicate.  device_put needs evenly
+    divisible shards, so a partition whose edge count does not divide the
+    data axis falls back to replication — the streaming loader pads to
+    STREAM_GRANULE_IDS buckets precisely so the common case divides.
+    """
+    if mesh is None:
+        return None, None
+    axis = "data" if "data" in mesh.axis_names else None
+    d = axis_size(mesh, axis) if axis else 1
+    nbr_spec = P(axis) if axis and d > 1 and n_edges % d == 0 else P(None)
+    return (NamedSharding(mesh, nbr_spec), NamedSharding(mesh, P(None)))
 
 
 # ---------------------------------------------------------------------------

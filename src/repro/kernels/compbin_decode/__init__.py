@@ -1,2 +1,4 @@
-from repro.kernels.compbin_decode.ops import compbin_decode  # noqa: F401
+from repro.kernels.compbin_decode.ops import (STREAM_GRANULE_IDS,  # noqa: F401
+                                              compbin_decode,
+                                              pad_packed_for_stream)
 from repro.kernels.compbin_decode.ref import compbin_decode_ref  # noqa: F401

@@ -6,10 +6,51 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels.compbin_decode.kernel import compbin_decode_planar
 from repro.kernels.compbin_decode.ref import compbin_decode_ref
 from repro.kernels.utils import ceil_div, interpret_default
+
+# Streaming granularity: partitions are padded (host-side, before the H2D
+# copy) to a multiple of this many IDs so the decode jit-cache holds a few
+# bucket shapes instead of one trace per partition, and every transfer in a
+# double-buffered stream has one of a few fixed sizes.
+STREAM_GRANULE_IDS = 1 << 15
+
+
+def stream_bucket_ids(n: int, granule: int = STREAM_GRANULE_IDS) -> int:
+    """Bucketed ID count for a partition of ``n`` IDs.
+
+    Rounds up keeping 4 significant bits (quantum 2^(bits-4)), floored at
+    1024: at most ~6% padding for any partition, O(16 log n) distinct
+    shapes total so the decode jit-cache stays small.  ``granule`` caps the
+    quantum so very large partitions stay aligned to a fixed multiple
+    (uniform transfer sizes for the double buffers)."""
+    if n <= 1024:
+        return 1024
+    q = min(1 << max(10, n.bit_length() - 4), granule)
+    return ceil_div(n, q) * q
+
+
+def pad_packed_for_stream(raw: np.ndarray, b: int, *,
+                          granule: int = STREAM_GRANULE_IDS
+                          ) -> tuple[np.ndarray, int]:
+    """Zero-pad a packed uint8 stream up to a :func:`stream_bucket_ids`
+    bucket.
+
+    Returns (padded bytes, n_valid_ids).  The caller decodes the whole
+    bucket on device and slices ``[:n_valid_ids]`` — padding decodes to
+    vertex 0 and is dropped before anything consumes it.
+    """
+    raw = np.ascontiguousarray(raw, dtype=np.uint8)
+    if raw.size % b:
+        raise ValueError(f"packed length {raw.size} not a multiple of b={b}")
+    n = raw.size // b
+    n_pad = stream_bucket_ids(n, granule)
+    if n_pad != n:
+        raw = np.pad(raw, (0, (n_pad - n) * b))
+    return raw, n
 
 
 @functools.partial(jax.jit, static_argnames=("b", "n", "block_rows", "interpret"))
@@ -39,10 +80,31 @@ def compbin_decode(packed: jnp.ndarray, b: int, *, block_rows: int = 256,
 
     packed: uint8[n*b] (or any shape with n*b elements, little-endian bytes
     per ID in memory order).  Returns int32[n].
+
+    b in [5,8] (graphs with |V| >= 2^32) is accepted for IDs that still fit
+    int32 — the int32-lane ceiling every on-device consumer has anyway;
+    the zero high bytes are stripped before the kernel so only 4 byte
+    planes cross into VMEM.  IDs >= 2^31 must take the host decode path
+    (core.policy.choose_stream_decode routes them there).
     """
-    if not 1 <= b <= 4:
-        raise ValueError(f"b must be in [1,4] for device decode, got {b}")
+    if not 1 <= b <= 8:
+        raise ValueError(f"b must be in [1,8] for device decode, got {b}")
     n = packed.size // b
+    if b > 4:
+        packed = jnp.asarray(packed).reshape(n, b)
+        try:
+            has_high = bool((packed[:, 4:] != 0).any())
+        except jax.errors.ConcretizationTypeError as e:
+            raise ValueError(
+                "b>4 device decode validates the high ID bytes and so needs "
+                "a concrete (non-traced) input; decode b<=4 inside jit") from e
+        if has_high:
+            raise ValueError(
+                f"b={b} packed stream holds IDs >= 2^32; they cannot decode "
+                "to int32 lanes — use the host decode path "
+                "(core.policy.choose_stream_decode routes this)")
+        packed = packed[:, :4]
+        b = 4
     if not use_kernel:
         return compbin_decode_ref(packed.reshape(-1), b)
     if interpret is None:

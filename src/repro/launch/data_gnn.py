@@ -74,6 +74,49 @@ def block_to_batch(arch_id: str, cfg, block: SampledBlock, rng) -> dict:
     return batch
 
 
+def shards_to_edge_index(shards) -> tuple:
+    """Streamed device shards -> (edge_src, edge_dst) ON DEVICE.
+
+    The whole point of the streaming loader: the neighbor IDs never exist
+    decoded on the host, so the edge index is derived where it is consumed.
+    Row IDs are expanded from each shard's offsets with a static
+    total_repeat_length (the shard's edge count), keeping shapes jit-able.
+    """
+    import jax.numpy as jnp
+
+    srcs, dsts = [], []
+    for s in sorted(shards, key=lambda sh: sh.v0):
+        deg = jnp.diff(s.offsets)
+        srcs.append(jnp.repeat(
+            jnp.arange(s.v0, s.v1, dtype=jnp.int32), deg,
+            total_repeat_length=s.n_edges))
+        dsts.append(s.neighbors.astype(jnp.int32))
+    if not srcs:
+        z = jnp.zeros(0, jnp.int32)
+        return z, z
+    return jnp.concatenate(srcs), jnp.concatenate(dsts)
+
+
+def streamed_graph_batch(arch_id: str, cfg, shards, rng, *,
+                         n_classes: int = 7) -> dict:
+    """Full-graph training dict straight from streamed device shards
+    (the device-resident sibling of :func:`full_graph_batch`)."""
+    import jax.numpy as jnp
+
+    src, dst = shards_to_edge_index(shards)
+    n = max((s.v1 for s in shards), default=0)
+    d_in = getattr(cfg, "d_in", getattr(cfg, "d_node_in", 16))
+    batch = {
+        "x": jnp.asarray(rng.standard_normal((n, d_in)).astype(np.float32)),
+        "edge_src": src,
+        "edge_dst": dst,
+    }
+    if arch_id in ("gcn-cora", "pna"):
+        batch["labels"] = jnp.asarray(rng.integers(0, n_classes, n))
+        batch["label_mask"] = jnp.asarray(rng.random(n) < 0.3)
+    return batch
+
+
 def full_graph_batch(arch_id: str, cfg, csr: CSR, rng, *,
                      n_classes: int = 7) -> dict:
     """Full-batch training dict from an in-memory CSR."""

@@ -117,9 +117,15 @@ class Roofline:
         return dataclasses.asdict(self)
 
 
-def roofline(cost: dict, coll: CollectiveStats, n_devices: int,
+def roofline(cost, coll: CollectiveStats, n_devices: int,
              model_flops: Optional[float] = None) -> Roofline:
-    """cost: compiled.cost_analysis() (per-device HLO module)."""
+    """cost: compiled.cost_analysis() (per-device HLO module).
+
+    jax <= 0.4.x returns a one-element list of dicts; newer jax returns
+    the dict directly — accept both.
+    """
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
     flops = float(cost.get("flops", 0.0))
     mem = float(cost.get("bytes accessed", 0.0))
     t_c = flops / PEAK_FLOPS

@@ -120,11 +120,11 @@ def _make_step(arch_id: str, cfg, opt_cfg: AdamWConfig, family: str,
                 return ({"params": params, "opt": opt, "ef": ef},
                         {**met, "loss": l})
 
+            from repro.distributed.sharding import shard_map
             batch_spec = jax.tree.map(lambda _: P("data"), batch)
-            return jax.shard_map(
+            return shard_map(
                 shard_step, mesh=mesh,
-                in_specs=(P(), batch_spec), out_specs=(P(), P()),
-                check_vma=False)(state, batch)
+                in_specs=(P(), batch_spec), out_specs=(P(), P()))(state, batch)
 
         return init_fn, jax.jit(step)
 

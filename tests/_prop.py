@@ -45,6 +45,40 @@ class Draw:
     def choice(self, seq):
         return seq[int(self.rng.integers(0, len(seq)))]
 
+    # -- graph strategies -------------------------------------------------
+    #: |V| values straddling the 2^8 / 2^16 / 2^24 fences of CompBin's
+    #: bytes_per_vertex, plus degenerate sizes (empty, single vertex).
+    VERTEX_FENCES = (0, 1, 2, 3, 255, 256, 257, 65535, 65536, 65537,
+                     (1 << 24) - 1, 1 << 24, (1 << 24) + 1)
+
+    def n_vertices(self, fence_bias: float = 0.7, cap: int = 1 << 17) -> int:
+        """Graph size, biased toward byte-width fences (capped: fence sizes
+        above ``cap`` are exercised via offsets-only paths by callers)."""
+        if self.rng.random() < fence_bias:
+            return int(self.choice([v for v in self.VERTEX_FENCES if v <= cap]))
+        return self.int(0, cap)
+
+    def csr(self, n_vertices=None, max_edges: int = 4096,
+            sort_neighbors: bool = True, dedupe: bool = True):
+        """Random CSR with edge-case structure: empty graphs, isolated
+        vertices (edges only touch a subset of rows), duplicate-free rows
+        when ``dedupe`` (required by the WebGraph encoder)."""
+        from repro.core.csr import CSR, csr_from_edges
+
+        n = self.n_vertices() if n_vertices is None else n_vertices
+        if n == 0:
+            return CSR(offsets=np.zeros(1, np.int64),
+                       neighbors=np.zeros(0, np.int32))
+        n_edges = self.int(0, max_edges)
+        # confine sources to a random sub-range so some vertices stay
+        # isolated (degree 0 rows are the classic off-by-one trap)
+        lo = self.int(0, max(0, n - 1))
+        hi = self.int(lo, n - 1)
+        src = self.ints(lo, hi, n_edges)
+        dst = self.ints(0, n - 1, n_edges)
+        return csr_from_edges(src, dst, n, sort_neighbors=sort_neighbors,
+                              dedupe=dedupe)
+
 
 def prop(n_cases: int = N_CASES):
     """Decorator: run ``test(draw)`` for ``n_cases`` seeded draws."""

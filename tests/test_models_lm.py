@@ -7,6 +7,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # heavy model sweeps; excluded from tier-1
+
 from repro.configs import get_arch
 from repro.models.transformer import (TransformerConfig, decode_step, forward,
                                       init_params, loss_fn, moe_ffn, prefill)

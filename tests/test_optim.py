@@ -4,6 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.distributed.sharding import shard_map
 from repro.optim import (AdamWConfig, adamw_init, adamw_update,
                          cosine_schedule, ef_compress_psum, ef_state_init,
                          global_norm)
@@ -63,10 +64,9 @@ def test_ef_compression_error_feedback_recovers_mean():
     from jax.sharding import PartitionSpec as P
     x = jnp.asarray(np.random.default_rng(0).standard_normal(512).astype(np.float32))
 
-    f = jax.jit(jax.shard_map(
+    f = jax.jit(shard_map(
         lambda g, e: ef_compress_psum(g, e, "data", axis_size=1),
-        mesh=mesh, in_specs=(P(), P()), out_specs=(P(), P()),
-        check_vma=False))
+        mesh=mesh, in_specs=(P(), P()), out_specs=(P(), P())))
     acc = jnp.zeros_like(x)
     e = ef_state_init(x)
     n = 64
@@ -88,7 +88,6 @@ def test_ef_compression_quantized_container_is_int8():
         q, s = _quantize(g, 7, "data")
         return jax.lax.psum(q, "data"), s
 
-    sm = jax.shard_map(fn, mesh=mesh, in_specs=(P(),), out_specs=(P(), P()),
-                       check_vma=False)
+    sm = shard_map(fn, mesh=mesh, in_specs=(P(),), out_specs=(P(), P()))
     jaxpr = jax.make_jaxpr(sm)(jnp.ones(16))
     assert "i8" in str(jaxpr)

@@ -126,6 +126,142 @@ def test_concurrent_reader_stress(datafile):
         assert ((snap == pgfuse.LOADED) | (snap == pgfuse.NOT_LOADED)).all()
 
 
+def test_eviction_vs_acquisition_stress(datafile):
+    """Fig. 1 state machine under fire: N threads hammer pread over a tiny
+    max_resident_bytes budget so eviction (0 -> -3 -> -1) races acquisition
+    (-1 -> -2 -> 1) on every block.  Required invariants: no deadlock, no
+    stale bytes served, statuses fully idle at the end, and the FS-level
+    resident_bytes accounting agrees exactly with what is actually cached."""
+    path, data = datafile
+    bs = 1024
+    n_threads = 12
+    with pgfuse.PGFuseFS(block_size=bs, max_resident_bytes=2 * bs) as fs:
+        cf = fs.mount(path)
+        errors = []
+        start = threading.Barrier(n_threads)
+
+        def worker(seed):
+            rng = np.random.default_rng(seed)
+            start.wait()
+            try:
+                for _ in range(150):
+                    off = int(rng.integers(0, len(data)))
+                    n = int(rng.integers(1, 4 * bs))
+                    got = cf.pread(off, n)
+                    if got != data[off:off + n]:
+                        errors.append(("stale", seed, off, n))
+            except Exception as e:
+                errors.append(("raised", seed, repr(e)))
+
+        threads = [threading.Thread(target=worker, args=(i,))
+                   for i in range(n_threads)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=120)
+        assert not any(t.is_alive() for t in threads), "deadlocked workers"
+        assert not errors, errors[:5]
+        snap = cf._statuses.snapshot()
+        assert ((snap == pgfuse.LOADED) | (snap == pgfuse.NOT_LOADED)).all()
+        # accounting must agree with reality, not drift under races
+        actual = sum(len(cf._blocks[b]) for b in cf.resident_blocks())
+        assert fs.resident_bytes == actual
+        assert fs.resident_bytes <= 2 * bs
+
+
+def test_close_races_concurrent_readers(datafile):
+    """close() must drain readers through status transitions, not free
+    pinned blocks from under them (the seed freed unconditionally)."""
+    path, data = datafile
+    bs = 4096
+    for _ in range(5):
+        fs = pgfuse.PGFuseFS(block_size=bs)
+        cf = fs.mount(path)
+        errors = []
+        stop = threading.Event()
+
+        def reader(seed):
+            rng = np.random.default_rng(seed)
+            try:
+                while not stop.is_set():
+                    off = int(rng.integers(0, len(data) - 1))
+                    n = int(rng.integers(1, 2 * bs))
+                    got = cf.pread(off, n)
+                    if got != data[off:off + min(n, len(data) - off)]:
+                        errors.append(("stale", off, n))
+            except ValueError:
+                return  # read on closed CachedFile: the expected signal
+            except Exception as e:
+                errors.append(("raised", repr(e)))
+
+        threads = [threading.Thread(target=reader, args=(i,)) for i in range(6)]
+        for t in threads:
+            t.start()
+        cf.pread(0, 100)  # ensure some blocks are resident before closing
+        fs.unmount()
+        stop.set()
+        for t in threads:
+            t.join(timeout=30)
+        assert not any(t.is_alive() for t in threads), "reader hung on close"
+        assert not errors, errors[:5]
+        assert fs.resident_bytes == 0, "close leaked resident accounting"
+
+
+def test_async_read_error_recording_is_locked():
+    """AsyncRead must collect producer errors under a lock (the seed
+    appended bare from N threads) and still surface the first one."""
+    from repro.core import paragrapher
+
+    class Boom(RuntimeError):
+        pass
+
+    g = type("G", (), {})()  # duck-typed handle: every read raises
+
+    def read_partition(v0, v1):
+        raise Boom(f"{v0}:{v1}")
+
+    g.read_partition = read_partition
+    ar = paragrapher.AsyncRead(g, [(i, i + 1) for i in range(32)],
+                               lambda buf: None, n_buffers=4, n_workers=8)
+    with pytest.raises(Boom):
+        ar.wait(30)
+    with ar._err_lock:
+        assert len(ar._errors) == 32
+
+
+def test_sequential_readahead_reduces_underlying_reads(datafile):
+    """readahead=r must cut underlying calls ~(1+r)x on a sequential scan
+    and serve byte-identical data."""
+    path, data = datafile
+    bs = 4096
+    counts = {}
+    for ra in (0, 3):
+        with pgfuse.PGFuseFS(block_size=bs, readahead=ra) as fs:
+            cf = fs.mount(path)
+            out = b"".join(cf.pread(off, 1000)
+                           for off in range(0, len(data), 1000))
+            assert out == data
+            counts[ra] = fs.stats().underlying_reads
+            if ra:
+                assert fs.stats().readahead_blocks > 0
+    n_blocks = -(-len(data) // bs)
+    assert counts[0] == n_blocks
+    assert counts[3] <= -(-n_blocks // 4) + 1, counts
+
+
+def test_readahead_under_eviction_budget(datafile):
+    """Readahead + tiny budget: prefetched blocks are evictable (status 0)
+    and the budget still holds."""
+    path, data = datafile
+    bs = 2048
+    with pgfuse.PGFuseFS(block_size=bs, readahead=4,
+                         max_resident_bytes=3 * bs) as fs:
+        cf = fs.mount(path)
+        for off in range(0, len(data), bs):
+            assert cf.pread(off, 100) == data[off:off + 100]
+        assert fs.resident_bytes <= 3 * bs
+
+
 def test_underlying_read_count_vs_naive(datafile):
     """The point of §III: far fewer underlying calls than consumer reads."""
     path, data = datafile

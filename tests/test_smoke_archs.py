@@ -9,6 +9,8 @@ import pytest
 
 from repro.configs import ARCH_IDS, get_arch
 
+pytestmark = pytest.mark.slow  # one init+step per arch; excluded from tier-1
+
 rng = np.random.default_rng(0)
 
 
