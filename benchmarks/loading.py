@@ -148,6 +148,36 @@ def load_streaming(path: str, profile: str = "lustre_ssd",
                        storage.requests, storage.bytes), stats)
 
 
+def load_streaming_multihost(path: str, hosts: int,
+                             profile: str = "lustre_ssd",
+                             block_size: int = PGFUSE_BLOCK,
+                             readahead: int = 2, n_parts: int = 16,
+                             n_buffers: int = 2):
+    """Multi-host simulated streamed load (data/multihost.py).
+
+    Every simulated host mounts its own PG-Fuse cache over its own
+    SimStorage clock (hosts do not share a storage port in the modeled
+    cluster), streams its slice of the shared plan, and reports its own
+    StreamStats.  Returns (io_s, per_host, aggregate) where ``io_s`` is
+    the max charged storage time over hosts (the cluster's wall-clock:
+    hosts load concurrently and training starts when the slowest
+    finishes) and ``per_host`` is [(StreamStats, SimStorage), ...] in
+    process order.
+    """
+    from repro.data.multihost import aggregate_stats, simulate_hosts
+
+    storages = [SimStorage(PROFILES[profile]) for _ in range(hosts)]
+    results = simulate_hosts(
+        path, hosts,
+        open_kwargs=lambda i: dict(
+            use_pgfuse=True, pgfuse_block_size=block_size,
+            pgfuse_readahead=readahead, pgfuse_pread_fn=storages[i].pread),
+        n_buffers=n_buffers, readahead=readahead, n_parts=n_parts)
+    agg = aggregate_stats(results)
+    io_s = max((st.charged_s for st in storages), default=0.0)
+    return io_s, [(r.stats, st) for r, st in zip(results, storages)], agg
+
+
 def _bench_streaming_main() -> None:
     """Emit a BENCH json line for the streaming loader vs the host path.
 
@@ -165,6 +195,8 @@ def _bench_streaming_main() -> None:
     ap.add_argument("--edge-factor", type=int, default=24)
     ap.add_argument("--readahead", type=int, default=2)
     ap.add_argument("--n-parts", type=int, default=16)
+    ap.add_argument("--hosts", type=int, default=1,
+                    help="also measure an N-host simulated streamed load")
     args = ap.parse_args()
     os.makedirs(args.workdir, exist_ok=True)
 
@@ -182,7 +214,7 @@ def _bench_streaming_main() -> None:
     res, stats = load_streaming(path, args.profile,
                                 readahead=args.readahead,
                                 n_parts=args.n_parts)
-    print("BENCH " + json.dumps({
+    out = {
         "bench": "streaming_loader",
         "profile": args.profile,
         "graph": {"scale": args.scale, "edge_factor": args.edge_factor,
@@ -194,7 +226,20 @@ def _bench_streaming_main() -> None:
                         "total_s": host.total_s, "requests": host.requests,
                         "bytes_read": host.bytes_read},
         "h2d_saving": 1.0 - stats.bytes_h2d / max(1, 4 * stats.edges),
-    }))
+    }
+    if args.hosts > 1:
+        io_s, per_host, agg = load_streaming_multihost(
+            path, args.hosts, args.profile, readahead=args.readahead,
+            n_parts=max(args.n_parts, args.hosts))
+        out["multihost"] = {
+            "hosts": args.hosts,
+            "io_s": io_s,                    # slowest host's charged time
+            "aggregate": agg.as_dict(),
+            "per_host": [{"process_index": i, "io_s": st.charged_s,
+                          **s.as_dict()}
+                         for i, (s, st) in enumerate(per_host)],
+        }
+    print("BENCH " + json.dumps(out))
 
 
 if __name__ == "__main__":

@@ -1,14 +1,25 @@
 #!/usr/bin/env python
 """End-to-end GNN training from a CompBin graph on storage.
 
-The full loop the paper accelerates: graph lives compressed on (simulated
-slow) storage -> ParaGrapher + PG-Fuse load/sample it -> GCN trains on
-sampled blocks.  Run:
+The full loop the paper accelerates, carried all the way into the model:
+graph lives compressed on (simulated slow) storage -> PG-Fuse enlarges +
+caches the reads -> packed CompBin bytes cross to the device undecoded ->
+the Pallas kernel decodes them there -> GCN trains full-batch on the
+device-resident edge index.  With ``--hosts N`` the load runs as N
+simulated processes (data/multihost.py), each streaming its own
+contiguous slice of the shared partition plan through its own PG-Fuse
+cache — the single-node rehearsal of a multi-host cluster load.  Run:
 
     PYTHONPATH=src python examples/train_gnn_from_compbin.py --steps 60
+    PYTHONPATH=src python examples/train_gnn_from_compbin.py --hosts 2
+    PYTHONPATH=src python examples/train_gnn_from_compbin.py --sampled
+
+``--sampled`` keeps the older minibatch regime: reassemble a host CSR
+from the streamed shards and train on sampled neighborhood blocks.
 """
 
 import argparse
+import itertools
 import os
 import sys
 import time
@@ -16,20 +27,38 @@ import time
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import paragrapher
-from repro.data import PrefetchIterator, assemble_csr, stream_partitions
+from repro.data import (PrefetchIterator, aggregate_stats, all_shards,
+                        assemble_csr, simulate_hosts)
 from repro.graph import NeighborSampler, rmat
-from repro.launch.data_gnn import block_to_batch
+from repro.launch.data_gnn import block_to_batch, streamed_graph_batch
 from repro.models.gnn import gcn
 from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+
+def _print_host_stats(results) -> None:
+    for r in results:
+        st = r.stats
+        print(f"  host {r.process_index}: vertices [{r.host_range[0]},"
+              f"{r.host_range[1]}) {st.partitions} partitions "
+              f"{st.edges:,} edges [{st.decode_mode} decode] "
+              f"{st.bytes_h2d/2**10:.0f} KiB H2D, {st.cache_hits} cache "
+              f"hits, {st.underlying_reads} storage reads")
+    agg = aggregate_stats(results)
+    print(f"streamed {agg.edges:,} edges total: {agg.bytes_h2d/2**20:.2f} "
+          f"MiB H2D, {agg.host_decode_bytes} host-decoded bytes, "
+          f"{agg.decode_edges_per_s/1e3:.0f}k edges/s decode")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--hosts", type=int, default=2,
+                    help="simulated streaming processes")
+    ap.add_argument("--sampled", action="store_true",
+                    help="minibatch sampling instead of full-graph")
     ap.add_argument("--batch-nodes", type=int, default=64)
     ap.add_argument("--workdir", default="/tmp/repro_gnn_example")
     args = ap.parse_args()
@@ -41,40 +70,20 @@ def main() -> None:
         paragrapher.save_graph(path, csr, format="compbin")
         print(f"wrote {os.path.getsize(path)/2**20:.1f} MiB CompBin graph")
 
-    g = paragrapher.open_graph(path, use_pgfuse=True,
-                               pgfuse_block_size=1 << 20,
-                               pgfuse_readahead=2)
+    # storage -> PG-Fuse -> packed CompBin -> device decode, per host
+    results = simulate_hosts(
+        path, args.hosts,
+        open_kwargs=dict(use_pgfuse=True, pgfuse_block_size=1 << 20,
+                         pgfuse_readahead=2),
+        n_buffers=2, readahead=2)
+    _print_host_stats(results)
+    shards = all_shards(results)
 
-    # Load the graph through the streaming partition->device pipeline
-    # (data/graph_stream.py): packed bytes go straight to the accelerator,
-    # the Pallas kernel decodes them there, and the sampler's hot loop then
-    # runs over the reassembled in-memory CSR instead of re-reading storage
-    # for every minibatch.
-    with stream_partitions(g, None, n_buffers=2, readahead=2) as stream:
-        shards = list(stream)
-    st = stream.stats
-    print(f"streamed {st.partitions} partitions, {st.edges:,} edges "
-          f"[{st.decode_mode} decode] in {st.wall_s:.2f}s: "
-          f"{st.underlying_reads} storage reads, {st.cache_hits} cache hits, "
-          f"{st.bytes_h2d/2**20:.1f} MiB H2D, "
-          f"{st.host_decode_bytes} host-decoded bytes, "
-          f"{st.decode_edges_per_s/1e3:.0f}k edges/s decode")
-    csr_mem = assemble_csr(shards)
-    pg_stats = g.pgfuse_stats()
-    n_vertices = g.n_vertices
-    g.close()  # graph now lives in memory; free the fd and block cache
-    sampler = NeighborSampler(csr_mem, fanouts=(10, 5), seed=0)
     cfg = gcn.GCNConfig(n_layers=2, d_hidden=32, d_in=32, n_classes=8)
     params = gcn.init_params(cfg, jax.random.key(0))
     opt_cfg = AdamWConfig(lr=3e-3, warmup_steps=10, total_steps=args.steps)
     opt = adamw_init(params, opt_cfg)
-
     rng = np.random.default_rng(0)
-
-    def batches():
-        while True:
-            seeds = rng.integers(0, n_vertices, args.batch_nodes)
-            yield block_to_batch("gcn-cora", cfg, sampler.sample(seeds), rng)
 
     @jax.jit
     def step(params, opt, batch):
@@ -82,18 +91,35 @@ def main() -> None:
         params, opt, met = adamw_update(params, grads, opt, opt_cfg)
         return params, opt, loss
 
-    it = PrefetchIterator(batches(), depth=2)
+    if args.sampled:
+        # minibatch regime: reassemble a host CSR once, sample blocks
+        csr_mem = assemble_csr(shards)
+        sampler = NeighborSampler(csr_mem, fanouts=(10, 5), seed=0)
+
+        def batches():
+            while True:
+                seeds = rng.integers(0, csr_mem.n_vertices, args.batch_nodes)
+                yield block_to_batch("gcn-cora", cfg, sampler.sample(seeds),
+                                     rng)
+
+        it = PrefetchIterator(batches(), depth=2)
+    else:
+        # full-graph regime: the streamed shards ARE the training batch —
+        # the neighbor IDs never existed decoded on the host
+        batch = streamed_graph_batch("gcn-cora", cfg, shards, rng,
+                                     n_classes=cfg.n_classes,
+                                     n_vertices=results[0].n_vertices)
+        it = itertools.repeat(batch)
+
     t0 = time.time()
     for i in range(1, args.steps + 1):
         params, opt, loss = step(params, opt, next(it))
         if i % 10 == 0:
             print(f"step {i:4d} loss {float(loss):.4f}")
     dt = time.time() - t0
-    print(f"\n{args.steps} steps in {dt:.1f}s "
-          f"({args.steps/dt:.1f} steps/s, sampler overlapped via prefetch)")
-    print(f"PG-Fuse (load phase): {pg_stats.underlying_reads} underlying "
-          f"reads, {pg_stats.cache_hits:,} cache hits, "
-          f"{pg_stats.readahead_blocks} readahead blocks")
+    mode = "sampled" if args.sampled else "full-graph"
+    print(f"\n{args.steps} {mode} steps in {dt:.1f}s "
+          f"({args.steps/dt:.1f} steps/s)")
 
 
 if __name__ == "__main__":

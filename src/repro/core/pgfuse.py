@@ -206,6 +206,21 @@ class CachedFile:
                     with self._cond:
                         self._cond.notify_all()
                     raise
+                expected_b = min(self.block_size, self.size - b * self.block_size)
+                if len(run) < expected_b:
+                    # A short underlying read that truncates the REQUESTED
+                    # block must surface as an error: installing the stub
+                    # would hand truncated bytes to every future reader,
+                    # and pread() could spin forever on a zero-byte take.
+                    # Claims revert (-2 -> -1) so a retry reloads cleanly.
+                    for c in claimed:
+                        ok = self._statuses.cas(c, LOADING, NOT_LOADED)
+                        assert ok
+                    with self._cond:
+                        self._cond.notify_all()
+                    raise IOError(
+                        f"{self.path}: short read of block {b}: got "
+                        f"{len(run)} of {expected_b} bytes")
                 now = time.monotonic()
                 installed_ahead = 0
                 for j, c in enumerate(claimed):

@@ -104,6 +104,24 @@ def choose_stream_decode(format: str, b: int = 0,
     raise ValueError(f"unknown graph format {format!r}")
 
 
+def choose_stream_parts(n_devices_total: int = 1, process_count: int = 1,
+                        min_parts_per_process: int = 8) -> int:
+    """Global partition count for a (possibly multi-host) streamed load.
+
+    Each process should see enough partitions to keep its pipeline's
+    double-buffering busy (at least ``min_parts_per_process``) and enough
+    to cover its slice of the mesh's devices 4x over (so the edge-balanced
+    plan can absorb skew).  The returned count is the GLOBAL plan size:
+    every process computes the same plan from the same file and takes its
+    ``split_plan`` slice, so the cut points agree without communication.
+    """
+    if process_count < 1:
+        raise ValueError(f"process_count must be >= 1, got {process_count}")
+    devices_per_process = max(1, n_devices_total // process_count)
+    per = max(min_parts_per_process, 4 * devices_per_process)
+    return per * process_count
+
+
 def calibrate(n_vertices: int = 1 << 16, n_edges: int = 1 << 18,
               seed: int = 0) -> SystemModel:
     """Measure decode rates (and a proxy storage bandwidth) on this host."""

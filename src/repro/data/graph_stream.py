@@ -41,11 +41,11 @@ import dataclasses
 import queue
 import threading
 import time
-from typing import Iterator, Optional
+from typing import Iterable, Iterator, Optional
 
 import numpy as np
 
-from repro.core import compbin, pgfuse, policy
+from repro.core import pgfuse, policy
 from repro.core.csr import CSR
 from repro.core.paragrapher import GraphHandle, PartitionBuffer
 
@@ -65,19 +65,31 @@ class StreamedShard:
         return self.v1 - self.v0
 
 
+#: StreamStats fields with dedicated merge rules (durations sum/max,
+#: mode/reason strings tie-break); every OTHER field is a counter and
+#: sums — derived from the dataclass so new counters merge automatically.
+_MERGE_SPECIAL_FIELDS = ("decode_mode", "decode_reason", "decode_s", "wall_s")
+
+
 @dataclasses.dataclass
 class StreamStats:
-    """Per-stage accounting for one stream (printed by benchmarks)."""
+    """Per-stage accounting for one stream (printed by benchmarks).
+
+    In a multi-host load each process carries its own instance; per-host
+    stats combine with :meth:`merge` (associative, so any reduction tree
+    over the hosts yields the same totals).
+    """
 
     partitions: int = 0
     vertices: int = 0
     edges: int = 0
-    decode_mode: str = ""          # "device" | "host"
+    decode_mode: str = ""          # "device" | "host" ("mixed" after merge)
     decode_reason: str = ""
     # storage stage (PG-Fuse deltas; zero when the graph is not mounted)
     underlying_reads: int = 0
     underlying_bytes: int = 0
     cache_hits: int = 0
+    cache_misses: int = 0
     readahead_blocks: int = 0
     # transfer stage
     bytes_h2d: int = 0             # bytes shipped host->device (packed!)
@@ -86,14 +98,54 @@ class StreamStats:
     decode_s: float = 0.0          # on-device, the CompBin fast path)
     wall_s: float = 0.0
 
+    # Every derived rate guards against zero/negative durations: a stage
+    # that never ran (empty plan slice on a host, sub-timer-resolution
+    # decode) reports 0.0 instead of dividing by zero.
     @property
     def decode_edges_per_s(self) -> float:
         return self.edges / self.decode_s if self.decode_s > 0 else 0.0
 
+    @property
+    def h2d_bytes_per_s(self) -> float:
+        return self.bytes_h2d / self.wall_s if self.wall_s > 0 else 0.0
+
+    @property
+    def edges_per_s(self) -> float:
+        return self.edges / self.wall_s if self.wall_s > 0 else 0.0
+
+    def merge(self, other: "StreamStats") -> "StreamStats":
+        """Combine two hosts' stats into the aggregate (returns a new
+        instance).  Counters sum; decode seconds sum (total decode work);
+        wall seconds take the max (hosts stream concurrently); mode/reason
+        collapse to "mixed"/"" when the hosts disagree.
+        """
+        merged = {f.name: getattr(self, f.name) + getattr(other, f.name)
+                  for f in dataclasses.fields(self)
+                  if f.name not in _MERGE_SPECIAL_FIELDS}
+        mode = (self.decode_mode if self.decode_mode == other.decode_mode
+                else "mixed")
+        reason = (self.decode_reason
+                  if self.decode_reason == other.decode_reason else "")
+        return StreamStats(decode_mode=mode, decode_reason=reason,
+                           decode_s=self.decode_s + other.decode_s,
+                           wall_s=max(self.wall_s, other.wall_s), **merged)
+
     def as_dict(self) -> dict:
         d = dataclasses.asdict(self)
         d["decode_edges_per_s"] = self.decode_edges_per_s
+        d["h2d_bytes_per_s"] = self.h2d_bytes_per_s
+        d["edges_per_s"] = self.edges_per_s
         return d
+
+
+def merge_stats(stats: Iterable[StreamStats]) -> StreamStats:
+    """Fold any number of per-host stats into one aggregate."""
+    out = StreamStats()
+    first = True
+    for s in stats:
+        out = dataclasses.replace(s) if first else out.merge(s)
+        first = False
+    return out
 
 
 class GraphStream:
@@ -108,15 +160,29 @@ class GraphStream:
                  n_buffers: int = 2, readahead: int = 2,
                  n_parts: Optional[int] = None, n_workers: int = 2,
                  granule: Optional[int] = None,
-                 decode_plan: Optional[policy.StreamDecodePlan] = None):
+                 decode_plan: Optional[policy.StreamDecodePlan] = None,
+                 process_index: int = 0, process_count: int = 1):
         # jax-facing imports are deferred to the staging stage so the
         # storage layer stays importable without jax
         from repro.kernels.compbin_decode import STREAM_GRANULE_IDS
+        from repro.graph.partition import host_vertex_range, split_plan
 
+        if not 0 <= process_index < process_count:
+            raise ValueError(
+                f"process_index {process_index} not in [0, {process_count})")
         self._graph = graph
         self._mesh = mesh
         self._granule = granule or STREAM_GRANULE_IDS
-        self.plan = graph.partition_plan(self._default_parts(n_parts, mesh))
+        self.process_index = process_index
+        self.process_count = process_count
+        # Every process derives the SAME global plan from the same file,
+        # then streams only its contiguous split_plan slice — the cut
+        # points agree across hosts with no communication (the plan is a
+        # pure function of the offsets array and n_parts).
+        self.global_plan = graph.partition_plan(
+            self._default_parts(n_parts, mesh, process_count))
+        self.plan = split_plan(self.global_plan, process_count)[process_index]
+        self.host_range = host_vertex_range(self.plan)
         self.decode_plan = decode_plan or policy.choose_stream_decode(
             graph.format, graph.bytes_per_id)
         self.stats = StreamStats(decode_mode=self.decode_plan.mode,
@@ -127,7 +193,6 @@ class GraphStream:
         self._t0 = time.perf_counter()
         self._pg0 = graph.pgfuse_stats() or pgfuse.PGFuseStats()
         self._pg0 = dataclasses.replace(self._pg0)  # snapshot, not live ref
-        self._host0 = compbin.host_decoded_bytes()
 
         # stage 1: storage + (for "host" mode) decode, on the producer pool
         self._rawq: "queue.Queue" = queue.Queue(maxsize=max(1, readahead))
@@ -141,15 +206,17 @@ class GraphStream:
             self._raw_iter(), depth=max(1, n_buffers), transform=self._stage)
 
     @staticmethod
-    def _default_parts(n_parts: Optional[int], mesh) -> int:
+    def _default_parts(n_parts: Optional[int], mesh,
+                       process_count: int = 1) -> int:
+        """GLOBAL partition count (an explicit ``n_parts`` is also global:
+        it is the size of the shared plan the processes split)."""
         if n_parts is not None:
             return max(1, n_parts)
+        total = 1
         if mesh is not None:
-            total = 1
             for s in mesh.devices.shape:
                 total *= s
-            return max(8, 4 * total)
-        return 8
+        return policy.choose_stream_parts(total, process_count)
 
     # -- stage 1: the read_async consumer callback -------------------------
     def _on_partition(self, buf: PartitionBuffer) -> None:
@@ -193,10 +260,13 @@ class GraphStream:
 
         kind, payload = item
         t0 = time.perf_counter()
+        place = lambda n_ids: stream_shard_placement(
+            self._mesh, n_ids, process_index=self.process_index,
+            process_count=self.process_count)
         if kind == "raw":
             v0, v1, offs, packed, b = payload
             padded, n = pad_packed_for_stream(packed, b, granule=self._granule)
-            nbr_shard, off_shard = stream_shard_placement(self._mesh, len(padded) // b)
+            nbr_shard, off_shard = place(len(padded) // b)
             dev_packed = jnp.asarray(padded)          # H2D: packed bytes only
             if nbr_shard is not None:
                 dev_packed = jax.device_put(dev_packed, nbr_shard)
@@ -209,13 +279,17 @@ class GraphStream:
             dtype = np.int32 if self._graph.n_vertices <= np.iinfo(np.int32).max \
                 else np.int64
             host_nbrs = np.ascontiguousarray(nbrs, dtype=dtype)
-            nbr_shard, off_shard = stream_shard_placement(self._mesh, n)
+            nbr_shard, off_shard = place(n)
             neighbors = jnp.asarray(host_nbrs)
             if nbr_shard is not None:
                 neighbors = jax.device_put(neighbors, nbr_shard)
             h2d = host_nbrs.nbytes
-            if self._graph.format != "compbin":
-                # compbin host decode is tallied by core.compbin itself
+            if self._graph.format == "compbin":
+                # packed bytes this partition decoded on the host — tallied
+                # per stream, NOT via compbin's process-global counter,
+                # which concurrent streams (multi-host simulator) share
+                self.stats.host_decode_bytes += n * self._graph.bytes_per_id
+            else:
                 self.stats.host_decode_bytes += host_nbrs.nbytes
         offsets = jnp.asarray(offs)
         if off_shard is not None:
@@ -250,10 +324,8 @@ class GraphStream:
             self.stats.underlying_reads = pg.underlying_reads - self._pg0.underlying_reads
             self.stats.underlying_bytes = pg.underlying_bytes - self._pg0.underlying_bytes
             self.stats.cache_hits = pg.cache_hits - self._pg0.cache_hits
+            self.stats.cache_misses = pg.cache_misses - self._pg0.cache_misses
             self.stats.readahead_blocks = pg.readahead_blocks - self._pg0.readahead_blocks
-        if self._graph.format == "compbin":
-            self.stats.host_decode_bytes = (
-                compbin.host_decoded_bytes() - self._host0)
 
     def close(self) -> None:
         if self._closed:
@@ -279,7 +351,8 @@ def stream_partitions(graph: GraphHandle, mesh=None, *,
                       n_buffers: int = 2, readahead: int = 2,
                       n_parts: Optional[int] = None, n_workers: int = 2,
                       granule: Optional[int] = None,
-                      decode_plan: Optional[policy.StreamDecodePlan] = None
+                      decode_plan: Optional[policy.StreamDecodePlan] = None,
+                      process_index: int = 0, process_count: int = 1
                       ) -> GraphStream:
     """Stream an open graph to the device(s) partition by partition.
 
@@ -288,10 +361,19 @@ def stream_partitions(graph: GraphHandle, mesh=None, *,
     device ahead of the consumer, and the PG-Fuse *block* readahead is set
     when the graph is opened (``open_graph(pgfuse_readahead=...)``).
     ``decode_plan`` overrides core.policy's CompBin-vs-WebGraph placement.
+
+    Multi-host: every process opens the graph itself (its own PG-Fuse
+    cache) and passes its ``process_index`` out of ``process_count``.  All
+    processes compute the same global plan; each streams only its
+    contiguous :func:`repro.graph.partition.split_plan` slice and places
+    shards on its :func:`repro.distributed.sharding.host_submesh` slice of
+    the mesh's "data" axis.  ``data/multihost.py`` simulates this in one
+    process for tests and single-node runs.
     """
     return GraphStream(graph, mesh, n_buffers=n_buffers, readahead=readahead,
                        n_parts=n_parts, n_workers=n_workers, granule=granule,
-                       decode_plan=decode_plan)
+                       decode_plan=decode_plan, process_index=process_index,
+                       process_count=process_count)
 
 
 def assemble_csr(shards: list[StreamedShard]) -> CSR:

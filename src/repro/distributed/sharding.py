@@ -146,7 +146,36 @@ def lm_cache_specs(cfg: TransformerConfig, mesh: Mesh, batch: int) -> dict:
 # Streamed CSR shards (data/graph_stream.py)
 # ---------------------------------------------------------------------------
 
-def stream_shard_placement(mesh: Optional[Mesh], n_edges: int
+def host_submesh(mesh: Optional[Mesh], process_index: int = 0,
+                 process_count: int = 1) -> Optional[Mesh]:
+    """One process's contiguous slice of the ``"data"`` axis.
+
+    Multi-host streaming places each host's shards on the devices that
+    host actually drives: the data axis is cut into ``process_count``
+    equal runs and process ``i`` gets run ``i``.  Falls back to the full
+    mesh when the axis is absent or does not divide (every process then
+    places onto the shared mesh, which is also what the single-device
+    in-process simulator exercises).
+    """
+    if mesh is None or process_count <= 1:
+        return mesh
+    if not 0 <= process_index < process_count:
+        raise ValueError(
+            f"process_index {process_index} not in [0, {process_count})")
+    if "data" not in mesh.axis_names:
+        return mesh
+    d = axis_size(mesh, "data")
+    if d % process_count:
+        return mesh
+    axis = list(mesh.axis_names).index("data")
+    per = d // process_count
+    idx = [slice(None)] * mesh.devices.ndim
+    idx[axis] = slice(process_index * per, (process_index + 1) * per)
+    return Mesh(mesh.devices[tuple(idx)], mesh.axis_names)
+
+
+def stream_shard_placement(mesh: Optional[Mesh], n_edges: int, *,
+                           process_index: int = 0, process_count: int = 1
                            ) -> tuple[Optional[NamedSharding],
                                       Optional[NamedSharding]]:
     """(neighbors, offsets) shardings for one streamed CSR partition.
@@ -157,7 +186,11 @@ def stream_shard_placement(mesh: Optional[Mesh], n_edges: int
     divisible shards, so a partition whose edge count does not divide the
     data axis falls back to replication — the streaming loader pads to
     STREAM_GRANULE_IDS buckets precisely so the common case divides.
+
+    ``process_index``/``process_count`` restrict placement to the calling
+    host's :func:`host_submesh` slice of the data axis.
     """
+    mesh = host_submesh(mesh, process_index, process_count)
     if mesh is None:
         return None, None
     axis = "data" if "data" in mesh.axis_names else None

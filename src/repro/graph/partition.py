@@ -43,3 +43,47 @@ def vertex_range_partition(csr: CSR, n_parts: int) -> list[tuple[int, int]]:
     if bounds[-1] != csr.n_vertices:
         bounds.append(csr.n_vertices)
     return [(bounds[i], bounds[i + 1]) for i in range(len(bounds) - 1)]
+
+
+def split_plan(plan: list[tuple[int, int]], process_count: int,
+               weights=None) -> list[list[tuple[int, int]]]:
+    """Assign a partition plan's entries to ``process_count`` processes.
+
+    Each process receives a *contiguous* run of plan entries (so its
+    vertex coverage is one contiguous range and its storage reads stay
+    sequential — the access pattern PG-Fuse readahead is built for).
+    The concatenation of the returned slices is exactly ``plan``: ranges
+    across processes are disjoint and cover the same vertices.
+
+    ``weights`` (per-entry work, e.g. edge counts) balances the cut
+    points; plans from ``GraphHandle.partition_plan`` are already
+    edge-balanced, so the default equal-weight split inherits that
+    balance.  Greedy cumulative-target cutting bounds every process at
+    ``total/process_count + max(weights)``.  With more processes than
+    entries the trailing processes receive empty slices.
+    """
+    if process_count < 1:
+        raise ValueError(f"process_count must be >= 1, got {process_count}")
+    n = len(plan)
+    w = np.ones(n) if weights is None else np.asarray(weights, dtype=np.float64)
+    if w.shape != (n,):
+        raise ValueError(f"weights shape {w.shape} != ({n},)")
+    if np.any(w < 0):
+        raise ValueError("weights must be >= 0")
+    cum = np.concatenate([[0.0], np.cumsum(w)])
+    total = cum[-1]
+    bounds = [0]
+    for i in range(process_count):
+        target = total * (i + 1) / process_count
+        cut = int(np.searchsorted(cum, target, side="left"))
+        bounds.append(min(n, max(bounds[-1], cut)))
+    bounds[-1] = n
+    return [plan[bounds[i]: bounds[i + 1]] for i in range(process_count)]
+
+
+def host_vertex_range(entries: list[tuple[int, int]]) -> tuple[int, int]:
+    """Vertex range [v0, v1) covered by one process's plan slice
+    (empty slices cover nothing and report (0, 0))."""
+    if not entries:
+        return (0, 0)
+    return (entries[0][0], entries[-1][1])

@@ -98,13 +98,37 @@ def shards_to_edge_index(shards) -> tuple:
 
 
 def streamed_graph_batch(arch_id: str, cfg, shards, rng, *,
-                         n_classes: int = 7) -> dict:
+                         n_classes: int = 7,
+                         n_vertices: int | None = None) -> dict:
     """Full-graph training dict straight from streamed device shards
-    (the device-resident sibling of :func:`full_graph_batch`)."""
+    (the device-resident sibling of :func:`full_graph_batch`).
+
+    ``shards`` may come from one stream or from every host of a
+    multi-host load (``data/multihost.py::all_shards``); full-graph
+    training needs the WHOLE vertex range, so a gap in coverage (a host's
+    shards missing) is an error, not a silently smaller graph.  Pass
+    ``n_vertices`` (the graph's true vertex count, e.g.
+    ``HostResult.n_vertices``) to also reject a missing TAIL — without it
+    only interior gaps are detectable.
+    """
     import jax.numpy as jnp
 
+    shards = sorted(shards, key=lambda s: s.v0)
+    expect = 0
+    for s in shards:
+        if s.v0 != expect:
+            raise ValueError(
+                f"streamed shards do not cover the graph: gap/overlap at "
+                f"vertex {expect} (next shard starts at {s.v0}); full-graph "
+                f"training needs every host's shards")
+        expect = s.v1
+    if n_vertices is not None and expect != n_vertices:
+        raise ValueError(
+            f"streamed shards cover only [0, {expect}) of {n_vertices} "
+            f"vertices (trailing host missing); full-graph training needs "
+            f"every host's shards")
     src, dst = shards_to_edge_index(shards)
-    n = max((s.v1 for s in shards), default=0)
+    n = expect  # the coverage loop proved the shards tile [0, expect)
     d_in = getattr(cfg, "d_in", getattr(cfg, "d_node_in", 16))
     batch = {
         "x": jnp.asarray(rng.standard_normal((n, d_in)).astype(np.float32)),

@@ -71,6 +71,49 @@ def _gnn_batches(arch_id: str, cfg, tmpdir: str, use_pgfuse: bool):
     return gen()
 
 
+def _gnn_full_graph_batches(arch_id: str, cfg, tmpdir: str, use_pgfuse: bool,
+                            hosts: int):
+    """Full-graph mode: storage -> PG-Fuse -> packed CompBin -> device
+    decode -> :func:`streamed_graph_batch`, on ``hosts`` simulated
+    processes.  The whole graph becomes ONE device-resident batch; every
+    step is a full-batch epoch (the classic Cora/ogbn regime), and the
+    neighbor IDs never exist decoded on the host.
+    """
+    from repro.core import paragrapher
+    from repro.data.multihost import (aggregate_stats, all_shards,
+                                      simulate_hosts)
+    from repro.graph import rmat
+    from repro.launch.data_gnn import streamed_graph_batch
+
+    path = os.path.join(tmpdir, "graph_full.cbin")
+    if not os.path.exists(path):
+        paragrapher.save_graph(path, rmat(10, 8, seed=1), format="compbin")
+    open_kwargs = dict(use_pgfuse=use_pgfuse, pgfuse_block_size=1 << 16,
+                       pgfuse_readahead=2)
+    results = simulate_hosts(path, hosts, open_kwargs=open_kwargs)
+    for r in results:
+        st = r.stats
+        log.info("host %d/%d: vertices [%d,%d) %d partitions %d edges "
+                 "[%s decode] %.1f KiB H2D, %d cache hits, %d storage reads",
+                 r.process_index, hosts, *r.host_range, st.partitions,
+                 st.edges, st.decode_mode, st.bytes_h2d / 1024,
+                 st.cache_hits, st.underlying_reads)
+    agg = aggregate_stats(results)
+    log.info("streamed %d edges over %d host(s): %.1f KiB H2D total, "
+             "%d host-decoded bytes", agg.edges, hosts,
+             agg.bytes_h2d / 1024, agg.host_decode_bytes)
+    batch = streamed_graph_batch(arch_id, cfg, all_shards(results),
+                                 np.random.default_rng(0),
+                                 n_classes=getattr(cfg, "n_classes", 7),
+                                 n_vertices=results[0].n_vertices)
+
+    def gen():
+        while True:
+            yield batch
+
+    return gen()
+
+
 def _din_batches(cfg, batch: int):
     rng = np.random.default_rng(0)
     while True:
@@ -148,6 +191,13 @@ def main() -> None:
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=20)
     ap.add_argument("--use-pgfuse", action="store_true", default=True)
+    ap.add_argument("--full-graph", action="store_true",
+                    help="GNN archs: train full-batch on the streamed "
+                         "partition->device pipeline instead of sampled "
+                         "minibatches")
+    ap.add_argument("--hosts", type=int, default=1,
+                    help="simulated processes for --full-graph streaming "
+                         "(data/multihost.py)")
     ap.add_argument("--compress-grads", action="store_true")
     ap.add_argument("--inject-failure-at", type=int, default=None)
     ap.add_argument("--workdir", default="/tmp/repro_train")
@@ -163,7 +213,12 @@ def main() -> None:
         batches = _lm_batches(cfg, args.batch, args.seq, args.workdir,
                               args.use_pgfuse)
     elif spec.family == "gnn":
-        batches = _gnn_batches(args.arch, cfg, args.workdir, args.use_pgfuse)
+        if args.full_graph:
+            batches = _gnn_full_graph_batches(args.arch, cfg, args.workdir,
+                                              args.use_pgfuse, args.hosts)
+        else:
+            batches = _gnn_batches(args.arch, cfg, args.workdir,
+                                   args.use_pgfuse)
     else:
         batches = _din_batches(cfg, args.batch)
 

@@ -58,6 +58,23 @@ class Draw:
             return int(self.choice([v for v in self.VERTEX_FENCES if v <= cap]))
         return self.int(0, cap)
 
+    def process_count(self, hi: int = 8) -> int:
+        """Simulated host counts, biased toward the interesting small end
+        (1 host = degenerate split, 2 = the common pair)."""
+        if self.rng.random() < 0.5:
+            return self.choice([1, 2])
+        return self.int(1, hi)
+
+    def plan(self, csr, max_parts: int = 9) -> list:
+        """An edge-balanced partition plan over ``csr`` (the same cut rule
+        GraphHandle.partition_plan uses), possibly with more requested
+        parts than the graph can support."""
+        from repro.graph.partition import vertex_range_partition
+
+        if csr.n_vertices == 0:
+            return []
+        return vertex_range_partition(csr, self.int(1, max_parts))
+
     def csr(self, n_vertices=None, max_edges: int = 4096,
             sort_neighbors: bool = True, dedupe: bool = True):
         """Random CSR with edge-case structure: empty graphs, isolated

@@ -1,0 +1,91 @@
+"""Shared fixtures: deterministic storage-fault injection for PG-Fuse.
+
+``FaultyStorage`` wraps a :class:`repro.core.pgfuse.CachedFile`'s
+``_read_underlying_range`` — the single funnel every underlying storage
+request passes through — so tests can inject the failure modes a Lustre /
+SSD-pool deployment actually produces:
+
+  * **transient errors** (``EIO`` from a flaky OST, surfacing exactly
+    once and succeeding on retry),
+  * **short reads** (the filesystem returning fewer bytes than asked),
+  * **latency** (a per-request floor, for readahead-effectiveness tests).
+
+Faults are keyed by the 1-based index of the underlying call *after*
+installation, which makes every test scenario deterministic: the k-th
+storage request fails, no matter how threads interleave, because the call
+counter is taken under a lock.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+
+import pytest
+
+
+class FaultyStorage:
+    """Programmable fault injector over ``CachedFile._read_underlying_range``.
+
+    Configure, then :meth:`install` onto one or more CachedFiles::
+
+        fs = FaultyStorage(latency_s=1e-3)
+        fs.fail_at[2] = OSError(errno.EIO, "flaky OST")   # 2nd call fails
+        fs.truncate_at[3] = 10                            # 3rd returns 10 B
+        fs.install(cached_file)
+
+    ``fail_at`` / ``truncate_at`` entries are popped when they fire, so
+    every injected fault is transient: the next attempt at the same block
+    goes through unharmed.  ``calls`` records ``(index, b0, n_blocks,
+    returned_bytes)`` for assertions about what storage actually saw.
+    """
+
+    def __init__(self, latency_s: float = 0.0):
+        self.latency_s = latency_s
+        self.fail_at: dict[int, BaseException] = {}
+        self.truncate_at: dict[int, int] = {}
+        self.calls: list[tuple[int, int, int, int]] = []
+        self._n = 0
+        self._lock = threading.Lock()
+
+    @property
+    def n_calls(self) -> int:
+        with self._lock:
+            return self._n
+
+    def install(self, cached_file) -> "FaultyStorage":
+        orig = cached_file._read_underlying_range
+
+        def wrapped(b0: int, n_blocks: int) -> bytes:
+            with self._lock:
+                self._n += 1
+                idx = self._n
+                exc = self.fail_at.pop(idx, None)
+                cut = self.truncate_at.pop(idx, None)
+            if self.latency_s:
+                time.sleep(self.latency_s)
+            if exc is not None:
+                with self._lock:
+                    self.calls.append((idx, b0, n_blocks, -1))
+                raise exc
+            data = orig(b0, n_blocks)
+            if cut is not None:
+                data = data[:cut]
+            with self._lock:
+                self.calls.append((idx, b0, n_blocks, len(data)))
+            return data
+
+        cached_file._read_underlying_range = wrapped
+        return self
+
+    def install_graph(self, graph) -> "FaultyStorage":
+        """Install onto an open ``GraphHandle``'s PG-Fuse cache."""
+        if graph._fs is None:
+            raise ValueError("graph was opened without use_pgfuse=True")
+        return self.install(graph._fs.mount(graph.path))
+
+
+@pytest.fixture
+def faulty_storage():
+    """A fresh :class:`FaultyStorage` controller per test."""
+    return FaultyStorage()

@@ -1,0 +1,122 @@
+"""Byte-exact golden-file regression tests for the on-disk formats.
+
+The CompBin and WebGraph encodings are WIRE FORMATS: files written by one
+build must load under every later build, and the partition plan / raw
+byte-range arithmetic in the streaming loader depends on exact header and
+section layout.  These tests pin the encodings to fixtures checked into
+``tests/golden/`` — if a single byte of an encoder's output changes, they
+fail, turning silent format breaks into explicit, reviewed version bumps.
+
+Regenerating (ONLY for an intentional format change, alongside a VERSION
+bump and a loader migration path)::
+
+    PYTHONPATH=src python tests/test_golden_formats.py --regenerate
+
+The golden graphs are literal edge lists (not generated), so the fixtures
+are independent of any RNG or generator code.
+"""
+
+import hashlib
+import io
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.core import compbin, paragrapher, webgraph
+from repro.core.csr import CSR
+
+GOLDEN_DIR = pathlib.Path(__file__).parent / "golden"
+
+
+def golden_graphs() -> dict:
+    """Canonical literal graphs, chosen to pin the format's edge cases:
+    empty graph, isolated vertices (degree-0 rows), a row touching the
+    max vertex ID, and a |V| just past the 256 fence (b=2 packing)."""
+    six = CSR(
+        offsets=np.array([0, 2, 5, 5, 6, 11, 12], dtype=np.int64),
+        neighbors=np.array([1, 3,  0, 2, 5,  4,  0, 1, 2, 3, 5,  2],
+                           dtype=np.int32),
+    )
+    empty = CSR(offsets=np.zeros(1, dtype=np.int64),
+                neighbors=np.zeros(0, dtype=np.int32))
+    # 300 vertices -> bytes_per_vertex = 2: pins the little-endian byte
+    # order of multi-byte packed IDs and the u64 offsets of a sparse row
+    # structure (only vertices 0, 150, 299 have edges)
+    offs = np.zeros(301, dtype=np.int64)
+    offs[1:151] = 2            # vertex 0 -> [150, 299]
+    offs[151:300] = 4          # vertex 150 -> [0, 299]
+    offs[300] = 5              # vertex 299 -> [150]
+    fence = CSR(offsets=offs,
+                neighbors=np.array([150, 299, 0, 299, 150], dtype=np.int32))
+    return {"six": six, "empty": empty, "fence300": fence}
+
+
+def _fixture(name: str, fmt: str) -> pathlib.Path:
+    ext = {"compbin": "cbin", "webgraph": "wg"}[fmt]
+    return GOLDEN_DIR / f"{name}.{ext}"
+
+
+def _encode(csr: CSR, fmt: str) -> bytes:
+    buf = io.BytesIO()
+    paragrapher.save_graph(buf, csr, format=fmt)
+    return buf.getvalue()
+
+
+@pytest.mark.parametrize("fmt", ["compbin", "webgraph"])
+@pytest.mark.parametrize("name", sorted(golden_graphs()))
+def test_encoder_matches_golden_bytes(name, fmt):
+    """Encoding the canonical graph reproduces the checked-in fixture
+    byte for byte (sha256 shown on mismatch for quick triage)."""
+    csr = golden_graphs()[name]
+    got = _encode(csr, fmt)
+    want = _fixture(name, fmt).read_bytes()
+    assert hashlib.sha256(got).hexdigest() == \
+        hashlib.sha256(want).hexdigest(), (
+            f"{fmt} wire format changed for {name!r}: "
+            f"{len(got)}B vs golden {len(want)}B — if intentional, bump "
+            f"VERSION and regenerate tests/golden (see module docstring)")
+    assert got == want
+
+
+@pytest.mark.parametrize("fmt", ["compbin", "webgraph"])
+@pytest.mark.parametrize("name", sorted(golden_graphs()))
+def test_decoder_reads_golden_fixture(name, fmt):
+    """Old files stay loadable: decoding the fixture yields the canonical
+    graph (guards against decoder drift independent of the encoder)."""
+    csr = golden_graphs()[name]
+    reader = {"compbin": compbin.read_compbin,
+              "webgraph": webgraph.read_webgraph}[fmt]
+    got = reader(io.BytesIO(_fixture(name, fmt).read_bytes()))
+    assert got == csr
+
+
+def test_golden_headers_pin_section_layout():
+    """The streaming loader seeks to fixed section offsets; pin them."""
+    hdr = compbin.read_header(io.BytesIO(_fixture("six", "compbin").read_bytes()))
+    assert (hdr.b, hdr.n_vertices, hdr.n_edges) == (1, 6, 12)
+    assert hdr.offsets_start == 24
+    assert hdr.neighbors_start == 24 + 8 * 7
+    assert hdr.total_size == _fixture("six", "compbin").stat().st_size
+    hdr2 = compbin.read_header(
+        io.BytesIO(_fixture("fence300", "compbin").read_bytes()))
+    assert hdr2.b == 2  # 300 vertices needs 2 bytes/ID
+
+
+def _regenerate() -> None:
+    GOLDEN_DIR.mkdir(exist_ok=True)
+    for name, csr in golden_graphs().items():
+        for fmt in ("compbin", "webgraph"):
+            p = _fixture(name, fmt)
+            p.write_bytes(_encode(csr, fmt))
+            print(f"wrote {p} ({p.stat().st_size}B "
+                  f"sha256={hashlib.sha256(p.read_bytes()).hexdigest()[:16]})")
+
+
+if __name__ == "__main__":
+    import sys
+
+    if "--regenerate" in sys.argv:
+        _regenerate()
+    else:
+        print(__doc__)

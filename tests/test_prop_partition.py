@@ -1,0 +1,104 @@
+"""Property tests for partition-plan invariants under host splitting
+(graph/partition.py::split_plan): the multi-host loader is only correct
+if every vertex is streamed by exactly one process and the work split
+stays balanced — these invariants are what the e2e tests lean on."""
+
+import numpy as np
+
+from repro.graph.partition import (host_vertex_range, split_plan,
+                                   vertex_range_partition)
+from tests._prop import Draw, prop
+
+
+def _entry_edges(csr, entries):
+    return sum(int(csr.offsets[v1] - csr.offsets[v0]) for v0, v1 in entries)
+
+
+@prop()
+def test_split_plan_partitions_the_plan(draw: Draw):
+    """Concatenating the per-host slices reproduces the plan exactly:
+    entries are never dropped, duplicated, or reordered."""
+    csr = draw.csr()
+    plan = draw.plan(csr)
+    k = draw.process_count()
+    slices = split_plan(plan, k)
+    assert len(slices) == k
+    concat = [e for s in slices for e in s]
+    assert concat == plan
+
+
+@prop()
+def test_split_plan_host_ranges_disjoint_and_cover(draw: Draw):
+    """Per-host vertex ranges are contiguous, mutually disjoint, and
+    cover [0, n_vertices) with no gaps."""
+    csr = draw.csr()
+    plan = draw.plan(csr)
+    k = draw.process_count()
+    slices = split_plan(plan, k)
+    cursor = 0
+    for s in slices:
+        v0, v1 = host_vertex_range(s)
+        if not s:
+            continue
+        assert v0 == cursor, "gap or overlap between host ranges"
+        assert v1 >= v0
+        # within one host the entries tile its range
+        inner = v0
+        for (a, b) in s:
+            assert a == inner and b > a
+            inner = b
+        assert inner == v1
+        cursor = v1
+    if csr.n_vertices:
+        assert cursor == csr.n_vertices, "hosts do not cover the graph"
+
+
+@prop()
+def test_split_plan_edge_balance_with_weights(draw: Draw):
+    """Weighted splitting keeps every host within the greedy-cut bound:
+    total/k + max entry weight (entries are atomic, so no contiguous
+    split can beat the largest single entry)."""
+    csr = draw.csr(max_edges=2048)
+    plan = draw.plan(csr)
+    if not plan:
+        return
+    k = draw.process_count()
+    weights = [int(csr.offsets[v1] - csr.offsets[v0]) for v0, v1 in plan]
+    slices = split_plan(plan, k, weights=weights)
+    total = sum(weights)
+    bound = total / k + max(weights, default=0) + 1e-9
+    for s in slices:
+        assert _entry_edges(csr, s) <= bound
+
+
+@prop()
+def test_split_plan_unweighted_inherits_plan_balance(draw: Draw):
+    """Default (equal-weight) splitting of an EDGE-BALANCED plan stays
+    within the same tolerance: per-host edges <= total/k + the heaviest
+    plan entry (the plan's own granularity)."""
+    csr = draw.csr(max_edges=2048)
+    if csr.n_vertices == 0 or csr.n_edges == 0:
+        return
+    plan = vertex_range_partition(csr, draw.int(1, 9))
+    k = draw.process_count()
+    slices = split_plan(plan, k)
+    per_entry = [int(csr.offsets[v1] - csr.offsets[v0]) for v0, v1 in plan]
+    # equal-weight cuts put ceil/floor(len/k) ENTRIES per host; each entry
+    # carries at most max(per_entry) edges beyond the even share
+    max_entries = -(-len(plan) // k)
+    bound = max_entries * max(per_entry)
+    for s in slices:
+        assert _entry_edges(csr, s) <= bound
+
+
+@prop()
+def test_split_plan_more_hosts_than_entries(draw: Draw):
+    """k > len(plan): every entry still lands on exactly one host and the
+    overflow hosts receive empty slices (they stream nothing) — never an
+    error, never a duplicated range."""
+    csr = draw.csr(max_edges=256)
+    plan = draw.plan(csr, max_parts=3)
+    k = len(plan) + draw.int(1, 5)
+    slices = split_plan(plan, k)
+    assert [e for s in slices for e in s] == plan
+    assert sum(1 for s in slices if s) <= max(1, len(plan))
