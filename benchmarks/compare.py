@@ -1,0 +1,87 @@
+"""BENCH json regression gate (CI's bench lane).
+
+Compares a freshly produced ``BENCH_*.json`` against the committed
+baseline and fails when any tracked throughput metric regresses more
+than the allowed fraction:
+
+    PYTHONPATH=src python -m benchmarks.compare BENCH_baseline.json \
+        BENCH_loading.json --max-regression 0.30
+
+Only the ``tracked`` section is gated.  Those metrics are deliberately
+derived from the SimStorage *virtual* clock and deterministic byte
+counters (see ``benchmarks/loading.py::run``) so they measure the
+loader's request pattern — enlarged blocks, readahead, cache hit rates,
+packed H2D transfer — not the speed of whichever machine CI landed on.
+Everything else in the json (wall-clock decode times etc.) is advisory
+and reported without gating.  Improvements are never an error; refresh
+the baseline deliberately when one should become the new floor.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def compare(baseline: dict, current: dict, max_regression: float
+            ) -> tuple[list[str], list[str]]:
+    """Returns (report_lines, failures)."""
+    base_tracked = baseline.get("tracked", {})
+    cur_tracked = current.get("tracked", {})
+    lines, failures = [], []
+    if not base_tracked:
+        failures.append("baseline has no 'tracked' section")
+        return lines, failures
+    for key in sorted(base_tracked):
+        old = base_tracked[key]
+        if not isinstance(old, (int, float)):
+            continue
+        if key not in cur_tracked:
+            failures.append(f"{key}: missing from current BENCH json")
+            continue
+        new = cur_tracked[key]
+        if old <= 0:  # nothing to gate against; report only
+            lines.append(f"  {key:<28} {old:>12.4g} -> {new:>12.4g}  (ungated)")
+            continue
+        ratio = new / old
+        status = "OK" if ratio >= 1.0 - max_regression else "REGRESSED"
+        lines.append(f"  {key:<28} {old:>12.4g} -> {new:>12.4g}  "
+                     f"({ratio:6.2%}) {status}")
+        if status == "REGRESSED":
+            failures.append(
+                f"{key}: {new:.4g} is {1 - ratio:.1%} below baseline "
+                f"{old:.4g} (allowed {max_regression:.0%})")
+    return lines, failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="fail if tracked BENCH throughput regressed")
+    ap.add_argument("baseline", help="committed BENCH_baseline.json")
+    ap.add_argument("current", help="freshly produced BENCH_*.json")
+    ap.add_argument("--max-regression", type=float, default=0.30,
+                    help="allowed fractional drop per metric (default 0.30)")
+    args = ap.parse_args(argv)
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.current) as f:
+        current = json.load(f)
+
+    lines, failures = compare(baseline, current, args.max_regression)
+    print(f"tracked metrics ({args.baseline} -> {args.current}, "
+          f"max regression {args.max_regression:.0%}):")
+    for line in lines:
+        print(line)
+    if failures:
+        print("\nREGRESSION GATE FAILED:", file=sys.stderr)
+        for fail in failures:
+            print(f"  {fail}", file=sys.stderr)
+        return 2
+    print("\nregression gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

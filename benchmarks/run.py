@@ -1,11 +1,16 @@
-"""Benchmark aggregator — one harness per paper table/figure.
+"""Benchmark aggregator — one registered suite per artifact.
 
     PYTHONPATH=src python -m benchmarks.run [--workdir DIR] [--fast]
+    PYTHONPATH=src python -m benchmarks.run --suites loading
 
-Prints one ``name,value,derived`` CSV block per artifact plus the
-formatted tables.  Absolute numbers are for THIS container (CPU + tmpfs +
-simulated storage profiles); the paper's relative effects are the claims
-under test (see EXPERIMENTS.md).
+Suites register in ``SUITES`` and the default run executes all of them:
+the paper-figure harnesses print one ``name,value,derived`` CSV block
+per table/figure, and every suite that measures loading bandwidth emits
+its ``BENCH_*.json`` (the files CI's bench lane uploads and gates with
+``benchmarks/compare.py``) — one entry point, all BENCH json.  Absolute
+numbers are for THIS container (CPU + tmpfs + simulated storage
+profiles); the paper's relative effects are the claims under test (see
+EXPERIMENTS.md).
 """
 
 from __future__ import annotations
@@ -15,20 +20,13 @@ import sys
 import time
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--workdir", default="/tmp/repro_bench")
-    ap.add_argument("--profile", default="lustre_ssd")
-    ap.add_argument("--fast", action="store_true",
-                    help="small suite only (CI)")
-    args = ap.parse_args()
-
+def _suite_figs(args) -> None:
+    """Table I + Figs. 2-4 (CSV blocks; no BENCH json)."""
     names = ["web-sm", "social-sm", "web-md"] if args.fast else None
 
     from benchmarks import (fig2_pgfuse, fig3_compbin, fig4_crossover,
                             table1_datasets)
 
-    t0 = time.time()
     print("=" * 72)
     print("Table I — datasets & format sizes")
     print("=" * 72)
@@ -68,6 +66,52 @@ def main() -> None:
     x = fig4_crossover.crossover_MiB(f4)
     print(f"fig4,SUMMARY,crossover_MiB={x if x else 'none'}")
 
+
+def _suite_loading(args) -> None:
+    """Streaming-loader bandwidth (topology + feature store) ->
+    BENCH_loading.json, the artifact CI's bench regression lane gates."""
+    from benchmarks import loading
+
+    print("=" * 72)
+    print("Loading — streamed topology + features (emits BENCH json)")
+    print("=" * 72)
+    loading.run(workdir=args.workdir, profile=args.profile,
+                scale=13 if args.fast else 16, hosts=args.hosts,
+                out=args.bench_out)
+
+
+#: registered suites, executed in order by default — add new benchmark
+#: harnesses here so ``python -m benchmarks.run`` stays the one entry
+#: point that emits every artifact (CSV blocks and BENCH_*.json alike)
+SUITES = {
+    "figs": _suite_figs,
+    "loading": _suite_loading,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workdir", default="/tmp/repro_bench")
+    ap.add_argument("--profile", default="lustre_ssd")
+    ap.add_argument("--fast", action="store_true",
+                    help="small suite only (CI)")
+    ap.add_argument("--suites", default=",".join(SUITES),
+                    help=f"comma list of suites to run "
+                         f"(available: {', '.join(SUITES)})")
+    ap.add_argument("--hosts", type=int, default=2,
+                    help="simulated hosts for the loading suite")
+    ap.add_argument("--bench-out", default="BENCH_loading.json",
+                    help="where the loading suite writes its BENCH json")
+    args = ap.parse_args()
+
+    picked = [s.strip() for s in args.suites.split(",") if s.strip()]
+    unknown = [s for s in picked if s not in SUITES]
+    if unknown:
+        ap.error(f"unknown suites {unknown}; available: {', '.join(SUITES)}")
+
+    t0 = time.time()
+    for name in picked:
+        SUITES[name](args)
     print("=" * 72)
     print(f"done in {time.time()-t0:.1f}s  "
           f"(roofline table: python -m benchmarks.roofline)")

@@ -29,10 +29,10 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax
 import numpy as np
 
-from repro.core import paragrapher
+from repro.core import paragrapher, policy
 from repro.data import (PrefetchIterator, aggregate_stats, all_shards,
                         assemble_csr, simulate_hosts)
-from repro.graph import NeighborSampler, rmat
+from repro.graph import NeighborSampler, featstore_for_graph, rmat
 from repro.launch.data_gnn import block_to_batch, streamed_graph_batch
 from repro.models.gnn import gcn
 from repro.optim import AdamWConfig, adamw_init, adamw_update
@@ -47,9 +47,11 @@ def _print_host_stats(results) -> None:
               f"{st.bytes_h2d/2**10:.0f} KiB H2D, {st.cache_hits} cache "
               f"hits, {st.underlying_reads} storage reads")
     agg = aggregate_stats(results)
-    print(f"streamed {agg.edges:,} edges total: {agg.bytes_h2d/2**20:.2f} "
+    print(f"streamed {agg.edges:,} edges + {agg.feature_rows:,} feature "
+          f"rows total: {(agg.bytes_h2d + agg.feature_bytes_h2d)/2**20:.2f} "
           f"MiB H2D, {agg.host_decode_bytes} host-decoded bytes, "
-          f"{agg.decode_edges_per_s/1e3:.0f}k edges/s decode")
+          f"{agg.decode_edges_per_s/1e3:.0f}k edges/s decode, feature "
+          f"hit rate {agg.feature_hit_rate:.2f}")
 
 
 def main() -> None:
@@ -64,18 +66,33 @@ def main() -> None:
     args = ap.parse_args()
     os.makedirs(args.workdir, exist_ok=True)
 
+    block_size = 1 << 20
+    d_in = 32
     path = os.path.join(args.workdir, "graph.cbin")
     if not os.path.exists(path):
         csr = rmat(12, 8, seed=1)
         paragrapher.save_graph(path, csr, format="compbin")
         print(f"wrote {os.path.getsize(path)/2**20:.1f} MiB CompBin graph")
+    feat_path = os.path.join(args.workdir, f"graph_d{d_in}.fst")
+    if not os.path.exists(feat_path):
+        featstore_for_graph(path, feat_path, d_in, seed=0,
+                            data_align=block_size)
+        print(f"wrote {os.path.getsize(feat_path)/2**20:.1f} MiB feature "
+              f"store ({d_in} float32/row)")
 
-    # storage -> PG-Fuse -> packed CompBin -> device decode, per host
+    # storage -> PG-Fuse -> packed CompBin + feature rows -> device, per
+    # host; cut vertices snap to the feature block grid so neighboring
+    # hosts' caches never fetch the same feature block.  --sampled
+    # synthesizes block features itself, so it skips the feature stream.
+    with paragrapher.open_graph(path) as g:
+        align = policy.choose_feature_align(block_size, d_in * 4,
+                                            g.n_vertices, args.hosts)
     results = simulate_hosts(
         path, args.hosts,
-        open_kwargs=dict(use_pgfuse=True, pgfuse_block_size=1 << 20,
+        open_kwargs=dict(use_pgfuse=True, pgfuse_block_size=block_size,
                          pgfuse_readahead=2),
-        n_buffers=2, readahead=2)
+        n_buffers=2, readahead=2,
+        feature_path=None if args.sampled else feat_path, align=align)
     _print_host_stats(results)
     shards = all_shards(results)
 

@@ -194,8 +194,25 @@ class GraphHandle:
         return [(bounds[i], bounds[i + 1]) for i in range(len(bounds) - 1)]
 
     # -- stats / lifecycle -----------------------------------------------------
+    @property
+    def fs(self) -> Optional[pgfuse.PGFuseFS]:
+        """The PG-Fuse mount (None without ``use_pgfuse``).  Auxiliary
+        stores — e.g. a :class:`repro.core.featstore.FeatureStoreHandle` —
+        mount here to share the graph's memory budget and readahead
+        policy while keeping their own per-file block cache and stats."""
+        return self._fs
+
     def pgfuse_stats(self) -> Optional[pgfuse.PGFuseStats]:
+        """Aggregate stats of the whole mount (every file on it)."""
         return self._fs.stats() if self._fs is not None else None
+
+    def pgfuse_file_stats(self) -> Optional[pgfuse.PGFuseStats]:
+        """This graph FILE's cache stats only — unlike
+        :meth:`pgfuse_stats` these stay attributable to topology traffic
+        when auxiliary files (feature stores) share the mount."""
+        if self._fs is None:
+            return None
+        return dataclasses.replace(self._fs.mount(self.path).stats)
 
     def close(self) -> None:
         if self._closed:

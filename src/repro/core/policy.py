@@ -20,6 +20,7 @@ from __future__ import annotations
 import dataclasses
 import io
 import time
+from typing import Optional
 
 import numpy as np
 
@@ -120,6 +121,33 @@ def choose_stream_parts(n_devices_total: int = 1, process_count: int = 1,
     devices_per_process = max(1, n_devices_total // process_count)
     per = max(min_parts_per_process, 4 * devices_per_process)
     return per * process_count
+
+
+def choose_feature_align(block_size: int, row_bytes: int,
+                         n_vertices: Optional[int] = None,
+                         process_count: int = 1,
+                         min_cuts_per_host: int = 2) -> int:
+    """Vertex alignment for block-disjoint per-host feature reads.
+
+    Cut vertices that are multiples of ``block_size // row_bytes`` land
+    on feature-store block boundaries (given a block-aligned data
+    section), so neighboring hosts never double-fetch a boundary block.
+    But alignment is an *optimization*: when the grid is coarser than
+    ``min_cuts_per_host`` grid points per host, snapping would starve
+    whole hosts (a 1024-vertex graph with 1024-vertex blocks has exactly
+    one interior grid point), so the policy degrades to 1 — unaligned
+    cuts and one shared boundary block per host pair, the pre-alignment
+    behavior.
+    """
+    if block_size < 1 or process_count < 1:
+        raise ValueError("block_size and process_count must be >= 1")
+    if row_bytes <= 0:
+        return 1
+    align = max(1, block_size // row_bytes)
+    if (n_vertices is not None
+            and align * process_count * min_cuts_per_host > n_vertices):
+        return 1
+    return align
 
 
 def calibrate(n_vertices: int = 1 << 16, n_edges: int = 1 << 18,

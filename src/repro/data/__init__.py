@@ -2,7 +2,7 @@ from repro.data.graph_stream import (GraphStream, StreamedShard,  # noqa: F401
                                      StreamStats, assemble_csr, merge_stats,
                                      stream_partitions)
 from repro.data.multihost import (HostResult, aggregate_stats,  # noqa: F401
-                                  all_shards, simulate_hosts)
+                                  all_shards, resplit_shares, simulate_hosts)
 from repro.data.prefetch import PrefetchIterator  # noqa: F401
 from repro.data.tokens import (TokenShardReader, TokenShardWriter,  # noqa: F401
                                write_token_shard)

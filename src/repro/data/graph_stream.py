@@ -10,9 +10,11 @@ device, not host RAM:
       -> read_async over PG-Fuse        producer pool, bounded buffers,
                                         sequential block readahead
       -> raw packed neighbor bytes      CompBin: NO host decode
+      -> feature rows (stream_features) core.featstore through the SAME
+                                        PG-Fuse mount, per vertex range
       -> double-buffered H2D transfer   PrefetchIterator staging thread
       -> on-device Pallas decode        kernels/compbin_decode, eq. (1)
-      -> per-partition CSR shards       placed on the mesh "data" axis
+      -> per-partition CSR shards (+x)  placed on the mesh "data" axis
 
 For CompBin with b <= 4 the packed stream crosses the host->device link
 undecoded, so the (4-b)/4 byte saving the paper claims for storage also
@@ -59,6 +61,8 @@ class StreamedShard:
     offsets: "jax.Array"      # int64[v1-v0+1], rebased to 0, replicated
     neighbors: "jax.Array"    # int32[n_edges] on the mesh "data" axis
     n_edges: int
+    x: Optional["jax.Array"] = None  # float[v1-v0, d] feature rows, when a
+                                     # feature store is streamed alongside
 
     @property
     def n_vertices(self) -> int:
@@ -92,10 +96,17 @@ class StreamStats:
     cache_misses: int = 0
     readahead_blocks: int = 0
     # transfer stage
-    bytes_h2d: int = 0             # bytes shipped host->device (packed!)
+    bytes_h2d: int = 0             # topology bytes host->device (packed!)
     # decode stage
     host_decode_bytes: int = 0     # packed bytes decoded on host (0 = all
     decode_s: float = 0.0          # on-device, the CompBin fast path)
+    # feature stage (stream_features; zero when no store is attached)
+    feature_rows: int = 0          # feature rows streamed
+    feature_bytes: int = 0         # bytes read from the feature store
+    feature_bytes_h2d: int = 0     # feature bytes shipped host->device
+    feature_read_s: float = 0.0    # time in feature-store reads
+    feature_cache_hits: int = 0    # the store's own PG-Fuse block cache
+    feature_cache_misses: int = 0
     wall_s: float = 0.0
 
     # Every derived rate guards against zero/negative durations: a stage
@@ -112,6 +123,15 @@ class StreamStats:
     @property
     def edges_per_s(self) -> float:
         return self.edges / self.wall_s if self.wall_s > 0 else 0.0
+
+    @property
+    def feature_bytes_per_s(self) -> float:
+        return self.feature_bytes / self.wall_s if self.wall_s > 0 else 0.0
+
+    @property
+    def feature_hit_rate(self) -> float:
+        n = self.feature_cache_hits + self.feature_cache_misses
+        return self.feature_cache_hits / n if n else 0.0
 
     def merge(self, other: "StreamStats") -> "StreamStats":
         """Combine two hosts' stats into the aggregate (returns a new
@@ -135,6 +155,8 @@ class StreamStats:
         d["decode_edges_per_s"] = self.decode_edges_per_s
         d["h2d_bytes_per_s"] = self.h2d_bytes_per_s
         d["edges_per_s"] = self.edges_per_s
+        d["feature_bytes_per_s"] = self.feature_bytes_per_s
+        d["feature_hit_rate"] = self.feature_hit_rate
         return d
 
 
@@ -161,7 +183,8 @@ class GraphStream:
                  n_parts: Optional[int] = None, n_workers: int = 2,
                  granule: Optional[int] = None,
                  decode_plan: Optional[policy.StreamDecodePlan] = None,
-                 process_index: int = 0, process_count: int = 1):
+                 process_index: int = 0, process_count: int = 1,
+                 feature_path=None, shares=None, align: int = 1):
         # jax-facing imports are deferred to the staging stage so the
         # storage layer stays importable without jax
         from repro.kernels.compbin_decode import STREAM_GRANULE_IDS
@@ -176,23 +199,44 @@ class GraphStream:
         self.process_index = process_index
         self.process_count = process_count
         # Every process derives the SAME global plan from the same file,
-        # then streams only its contiguous split_plan slice — the cut
-        # points agree across hosts with no communication (the plan is a
-        # pure function of the offsets array and n_parts).
+        # then streams only its split_plan slice — the cut points agree
+        # across hosts with no communication (the plan, the capacity
+        # ``shares``, and the block grid ``align`` are the same inputs on
+        # every host; shares come from allgathered last-epoch stats, see
+        # graph.partition.resplit_from_stats).
         self.global_plan = graph.partition_plan(
             self._default_parts(n_parts, mesh, process_count))
-        self.plan = split_plan(self.global_plan, process_count)[process_index]
+        self.plan = split_plan(self.global_plan, process_count,
+                               shares=shares, align=align)[process_index]
         self.host_range = host_vertex_range(self.plan)
         self.decode_plan = decode_plan or policy.choose_stream_decode(
             graph.format, graph.bytes_per_id)
         self.stats = StreamStats(decode_mode=self.decode_plan.mode,
                                  decode_reason=self.decode_plan.reason)
+        # stream_features stage: the node-feature store rides the same
+        # PG-Fuse mount as the topology (shared memory budget + readahead
+        # policy, its own per-file block cache and stats)
+        self._features = None
+        self._feat0 = pgfuse.PGFuseStats()
+        if feature_path is not None:
+            from repro.core import featstore
+            self._features = featstore.open_featstore(feature_path,
+                                                      fs=graph.fs)
+            if self._features.n_rows != graph.n_vertices:
+                self._features.close()
+                raise ValueError(
+                    f"feature store {feature_path} has "
+                    f"{self._features.n_rows} rows for a graph of "
+                    f"{graph.n_vertices} vertices")
+            self._feat0 = self._features.pgfuse_stats() or pgfuse.PGFuseStats()
         self._n_expected = len(self.plan)
         self._closed = False
         self._drop = threading.Event()   # tells the callback to discard
         self._t0 = time.perf_counter()
-        self._pg0 = graph.pgfuse_stats() or pgfuse.PGFuseStats()
-        self._pg0 = dataclasses.replace(self._pg0)  # snapshot, not live ref
+        # topology storage deltas come from the graph FILE's cache, not
+        # the mount aggregate — a feature store on the same mount must
+        # not leak its traffic into the topology counters
+        self._pg0 = graph.pgfuse_file_stats() or pgfuse.PGFuseStats()
 
         # stage 1: storage + (for "host" mode) decode, on the producer pool
         self._rawq: "queue.Queue" = queue.Queue(maxsize=max(1, readahead))
@@ -298,8 +342,35 @@ class GraphStream:
         offsets.block_until_ready()     # to the consumer's first use
         self.stats.decode_s += time.perf_counter() - t0
         self.stats.bytes_h2d += h2d + offs.nbytes
+        # the feature stage runs OUTSIDE the decode timer: its cost is
+        # feature_read_s, not decode_s
+        x = self._stream_features(v0, v1, off_shard)
         return StreamedShard(v0=v0, v1=v1, offsets=offsets,
-                             neighbors=neighbors, n_edges=n)
+                             neighbors=neighbors, n_edges=n, x=x)
+
+    def _stream_features(self, v0: int, v1: int, placement):
+        """The stream_features stage: feature rows [v0, v1) from the
+        attached store — PG-Fuse enlarged/cached reads, same staging
+        thread as topology H2D, so feature transfer double-buffers ahead
+        of the consumer exactly like the packed neighbor bytes do.
+        Feature rows are per-vertex (like offsets) and replicate on the
+        host's submesh slice."""
+        if self._features is None:
+            return None
+        import jax
+        import jax.numpy as jnp
+
+        t0 = time.perf_counter()
+        rows = self._features.read_rows(v0, v1)
+        self.stats.feature_read_s += time.perf_counter() - t0
+        self.stats.feature_rows += rows.shape[0]
+        self.stats.feature_bytes += rows.nbytes
+        x = jnp.asarray(rows)
+        if placement is not None:
+            x = jax.device_put(x, placement)
+        x.block_until_ready()
+        self.stats.feature_bytes_h2d += rows.nbytes
+        return x
 
     # -- the consumer-facing iterator --------------------------------------
     def __iter__(self) -> "GraphStream":
@@ -319,13 +390,20 @@ class GraphStream:
     def _finalize(self) -> None:
         if self.stats.wall_s == 0.0:
             self.stats.wall_s = time.perf_counter() - self._t0
-        pg = self._graph.pgfuse_stats()
+        pg = self._graph.pgfuse_file_stats()
         if pg is not None:
             self.stats.underlying_reads = pg.underlying_reads - self._pg0.underlying_reads
             self.stats.underlying_bytes = pg.underlying_bytes - self._pg0.underlying_bytes
             self.stats.cache_hits = pg.cache_hits - self._pg0.cache_hits
             self.stats.cache_misses = pg.cache_misses - self._pg0.cache_misses
             self.stats.readahead_blocks = pg.readahead_blocks - self._pg0.readahead_blocks
+        if self._features is not None:
+            fst = self._features.pgfuse_stats()
+            if fst is not None:
+                self.stats.feature_cache_hits = \
+                    fst.cache_hits - self._feat0.cache_hits
+                self.stats.feature_cache_misses = \
+                    fst.cache_misses - self._feat0.cache_misses
 
     def close(self) -> None:
         if self._closed:
@@ -339,6 +417,8 @@ class GraphStream:
             except queue.Empty:
                 break
         self._finalize()
+        if self._features is not None:
+            self._features.close()
 
     def __enter__(self) -> "GraphStream":
         return self
@@ -352,7 +432,8 @@ def stream_partitions(graph: GraphHandle, mesh=None, *,
                       n_parts: Optional[int] = None, n_workers: int = 2,
                       granule: Optional[int] = None,
                       decode_plan: Optional[policy.StreamDecodePlan] = None,
-                      process_index: int = 0, process_count: int = 1
+                      process_index: int = 0, process_count: int = 1,
+                      feature_path=None, shares=None, align: int = 1
                       ) -> GraphStream:
     """Stream an open graph to the device(s) partition by partition.
 
@@ -362,18 +443,28 @@ def stream_partitions(graph: GraphHandle, mesh=None, *,
     when the graph is opened (``open_graph(pgfuse_readahead=...)``).
     ``decode_plan`` overrides core.policy's CompBin-vs-WebGraph placement.
 
+    ``feature_path`` attaches a :mod:`repro.core.featstore` node-feature
+    store: each shard then carries its vertices' feature rows (``x``),
+    read through the graph's PG-Fuse mount and double-buffered to device
+    alongside the topology (the ``stream_features`` stage; per-stage
+    bytes and cache hit rates land in :class:`StreamStats`).
+
     Multi-host: every process opens the graph itself (its own PG-Fuse
     cache) and passes its ``process_index`` out of ``process_count``.  All
     processes compute the same global plan; each streams only its
     contiguous :func:`repro.graph.partition.split_plan` slice and places
     shards on its :func:`repro.distributed.sharding.host_submesh` slice of
-    the mesh's "data" axis.  ``data/multihost.py`` simulates this in one
-    process for tests and single-node runs.
+    the mesh's "data" axis.  ``shares`` sizes the slices by measured host
+    capacity (:func:`repro.graph.partition.resplit_from_stats`) and
+    ``align`` snaps the inter-host cuts to a block grid so private caches
+    never double-fetch a boundary feature block.  ``data/multihost.py``
+    simulates this in one process for tests and single-node runs.
     """
     return GraphStream(graph, mesh, n_buffers=n_buffers, readahead=readahead,
                        n_parts=n_parts, n_workers=n_workers, granule=granule,
                        decode_plan=decode_plan, process_index=process_index,
-                       process_count=process_count)
+                       process_count=process_count, feature_path=feature_path,
+                       shares=shares, align=align)
 
 
 def assemble_csr(shards: list[StreamedShard]) -> CSR:

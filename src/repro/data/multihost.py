@@ -109,6 +109,23 @@ def aggregate_stats(results: list[HostResult]) -> StreamStats:
     return merge_stats(r.stats for r in results)
 
 
+def resplit_shares(results: list[HostResult], *, floor: float = 0.25):
+    """Next-epoch capacity shares from a simulated epoch's results.
+
+    The straggler-aware loop: ``simulate_hosts`` an epoch, feed the
+    measured per-host wall times back through
+    :func:`repro.graph.partition.stream_shares_from_stats`, and pass the
+    returned shares to the next ``simulate_hosts(..., shares=...)`` — a
+    host that loaded slowly gets a proportionally smaller slice.  On a
+    real cluster the stats are allgathered and every process computes the
+    same shares; the simulator has them all in hand already.
+    """
+    from repro.graph.partition import stream_shares_from_stats
+
+    ordered = sorted(results, key=lambda r: r.process_index)
+    return stream_shares_from_stats([r.stats for r in ordered], floor=floor)
+
+
 def all_shards(results: list[HostResult]) -> list[StreamedShard]:
     """Every host's shards, ordered by vertex range — ready for
     :func:`repro.launch.data_gnn.streamed_graph_batch` /

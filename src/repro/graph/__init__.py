@@ -1,3 +1,8 @@
+from repro.graph.features import (featstore_for_graph,  # noqa: F401
+                                  synthesize_node_features,
+                                  write_node_features)
 from repro.graph.generators import erdos_renyi, rmat  # noqa: F401
-from repro.graph.partition import edge_balanced_partition  # noqa: F401
+from repro.graph.partition import (edge_balanced_partition,  # noqa: F401
+                                   resplit_from_stats, split_plan,
+                                   stream_shares_from_stats)
 from repro.graph.sampler import NeighborSampler, SampledBlock  # noqa: F401

@@ -1,0 +1,66 @@
+"""Node-feature converters: build ``core.featstore`` files for a graph.
+
+Real pipelines convert whatever raw feature source they have (npy dumps,
+parquet columns, an embedding table) into the fixed-stride FeatStore
+layout once, then stream it through PG-Fuse on every epoch.  This module
+provides that converter plus a deterministic synthesizer for graphs that
+ship without features (RMAT/ER benchmark graphs): the synthesized matrix
+is a pure function of ``(n_vertices, d, seed)``, so tests can regenerate
+any row range independently and byte-compare it against store reads.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Optional, Union
+
+import numpy as np
+
+from repro.core import featstore
+
+
+def synthesize_node_features(n_vertices: int, d: int, *, seed: int = 0,
+                             dtype=np.float32) -> np.ndarray:
+    """Deterministic stand-in feature matrix (n_vertices, d)."""
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal((n_vertices, d)).astype(dtype)
+
+
+def write_node_features(path: Union[str, os.PathLike], x: np.ndarray, *,
+                        dtype=None,
+                        data_align: int = featstore.DEFAULT_DATA_ALIGN
+                        ) -> int:
+    """Convert a feature matrix into a FeatStore file; returns bytes
+    written.  Pass ``data_align=pgfuse_block_size`` so block-aligned
+    plan cuts (``partition.split_plan(align=...)``) make per-host
+    feature reads block-disjoint."""
+    return featstore.write_featstore(path, x, dtype=dtype,
+                                     data_align=data_align)
+
+
+def featstore_for_graph(graph_path: Union[str, os.PathLike],
+                        out_path: Union[str, os.PathLike], d: int, *,
+                        seed: int = 0, dtype=None,
+                        data_align: int = featstore.DEFAULT_DATA_ALIGN,
+                        x: Optional[np.ndarray] = None) -> str:
+    """Write the feature store matching ``graph_path``'s vertex count.
+
+    ``x`` supplies real features (row count must equal |V|) and is
+    stored in ITS dtype unless ``dtype`` explicitly overrides — a
+    caller's float16 matrix must not silently widen to float32 and
+    double the store's byte stream.  Without ``x`` a synthesized matrix
+    stands in (float32 unless ``dtype`` says otherwise).  Returns
+    ``out_path``.
+    """
+    from repro.core import paragrapher
+
+    with paragrapher.open_graph(graph_path) as g:
+        n = g.n_vertices
+    if x is None:
+        x = synthesize_node_features(n, d, seed=seed,
+                                     dtype=dtype or np.float32)
+    elif x.shape[0] != n:
+        raise ValueError(
+            f"feature rows {x.shape[0]} != graph vertices {n}")
+    write_node_features(out_path, x, dtype=dtype, data_align=data_align)
+    return os.fspath(out_path)

@@ -97,6 +97,28 @@ def shards_to_edge_index(shards) -> tuple:
     return jnp.concatenate(srcs), jnp.concatenate(dsts)
 
 
+def shards_to_features(shards) -> "jax.Array | None":
+    """Streamed per-shard feature rows -> one (n, d) device matrix.
+
+    Returns None when the shards carry no features (no store attached).
+    A MIX of featured and feature-less shards is an error: it means some
+    host streamed the feature store and some did not, and training would
+    silently run on garbage rows for the missing range.
+    """
+    import jax.numpy as jnp
+
+    shards = sorted(shards, key=lambda s: s.v0)
+    have = [s.x is not None for s in shards]
+    if not any(have):
+        return None
+    if not all(have):
+        missing = [(s.v0, s.v1) for s, h in zip(shards, have) if not h]
+        raise ValueError(
+            f"shards {missing} carry no feature rows but others do; every "
+            f"host must stream the same feature store")
+    return jnp.concatenate([s.x for s in shards])
+
+
 def streamed_graph_batch(arch_id: str, cfg, shards, rng, *,
                          n_classes: int = 7,
                          n_vertices: int | None = None) -> dict:
@@ -110,6 +132,11 @@ def streamed_graph_batch(arch_id: str, cfg, shards, rng, *,
     ``n_vertices`` (the graph's true vertex count, e.g.
     ``HostResult.n_vertices``) to also reject a missing TAIL — without it
     only interior gaps are detectable.
+
+    When the stream carried a feature store (``feature_path=``), ``x``
+    is the shards' real feature rows — storage -> PG-Fuse -> device with
+    zero host synthesis; the hashed-random stand-in is used only for
+    feature-less streams.
     """
     import jax.numpy as jnp
 
@@ -130,8 +157,15 @@ def streamed_graph_batch(arch_id: str, cfg, shards, rng, *,
     src, dst = shards_to_edge_index(shards)
     n = expect  # the coverage loop proved the shards tile [0, expect)
     d_in = getattr(cfg, "d_in", getattr(cfg, "d_node_in", 16))
+    x = shards_to_features(shards)
+    if x is not None and int(x.shape[1]) != d_in:
+        raise ValueError(
+            f"feature store rows have d={int(x.shape[1])} but the model "
+            f"expects d_in={d_in}")
+    if x is None:
+        x = jnp.asarray(rng.standard_normal((n, d_in)).astype(np.float32))
     batch = {
-        "x": jnp.asarray(rng.standard_normal((n, d_in)).astype(np.float32)),
+        "x": x.astype(jnp.float32),
         "edge_src": src,
         "edge_dst": dst,
     }

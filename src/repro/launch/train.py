@@ -73,35 +73,57 @@ def _gnn_batches(arch_id: str, cfg, tmpdir: str, use_pgfuse: bool):
 
 def _gnn_full_graph_batches(arch_id: str, cfg, tmpdir: str, use_pgfuse: bool,
                             hosts: int):
-    """Full-graph mode: storage -> PG-Fuse -> packed CompBin -> device
-    decode -> :func:`streamed_graph_batch`, on ``hosts`` simulated
-    processes.  The whole graph becomes ONE device-resident batch; every
-    step is a full-batch epoch (the classic Cora/ogbn regime), and the
-    neighbor IDs never exist decoded on the host.
+    """Full-graph mode: storage -> PG-Fuse -> packed CompBin + FeatStore
+    rows -> device decode -> :func:`streamed_graph_batch`, on ``hosts``
+    simulated processes.  The whole graph becomes ONE device-resident
+    batch; every step is a full-batch epoch (the classic Cora/ogbn
+    regime).  Neither the neighbor IDs nor the feature rows are ever
+    synthesized or decoded on the host: ``x`` comes off storage through
+    the same PG-Fuse mount as the topology.
     """
-    from repro.core import paragrapher
+    from repro.core import paragrapher, policy
     from repro.data.multihost import (aggregate_stats, all_shards,
                                       simulate_hosts)
-    from repro.graph import rmat
+    from repro.graph import featstore_for_graph, rmat
     from repro.launch.data_gnn import streamed_graph_batch
 
+    block_size = 1 << 16
+    d_in = getattr(cfg, "d_in", getattr(cfg, "d_node_in", 16))
     path = os.path.join(tmpdir, "graph_full.cbin")
     if not os.path.exists(path):
         paragrapher.save_graph(path, rmat(10, 8, seed=1), format="compbin")
-    open_kwargs = dict(use_pgfuse=use_pgfuse, pgfuse_block_size=1 << 16,
+    feat_path = os.path.join(tmpdir, f"graph_full_d{d_in}.fst")
+    if not os.path.exists(feat_path):
+        # the converter: real deployments convert their raw feature dump
+        # once; benchmark graphs get the deterministic synthesized matrix
+        featstore_for_graph(path, feat_path, d_in, seed=0,
+                            data_align=block_size)
+    open_kwargs = dict(use_pgfuse=use_pgfuse, pgfuse_block_size=block_size,
                        pgfuse_readahead=2)
-    results = simulate_hosts(path, hosts, open_kwargs=open_kwargs)
+    with paragrapher.open_graph(path) as g:
+        align = policy.choose_feature_align(block_size, d_in * 4,
+                                            g.n_vertices, hosts)
+    results = simulate_hosts(path, hosts, open_kwargs=open_kwargs,
+                             feature_path=feat_path, align=align)
     for r in results:
         st = r.stats
         log.info("host %d/%d: vertices [%d,%d) %d partitions %d edges "
-                 "[%s decode] %.1f KiB H2D, %d cache hits, %d storage reads",
+                 "[%s decode] %.1f KiB H2D, %d cache hits, %d storage "
+                 "reads, %.1f KiB features (hit rate %.2f)",
                  r.process_index, hosts, *r.host_range, st.partitions,
                  st.edges, st.decode_mode, st.bytes_h2d / 1024,
-                 st.cache_hits, st.underlying_reads)
+                 st.cache_hits, st.underlying_reads,
+                 st.feature_bytes / 1024, st.feature_hit_rate)
     agg = aggregate_stats(results)
-    log.info("streamed %d edges over %d host(s): %.1f KiB H2D total, "
-             "%d host-decoded bytes", agg.edges, hosts,
-             agg.bytes_h2d / 1024, agg.host_decode_bytes)
+    log.info("streamed %d edges + %d feature rows (%.1f KiB) over %d "
+             "host(s): %.1f KiB H2D total, %d host-decoded bytes",
+             agg.edges, agg.feature_rows, agg.feature_bytes / 1024, hosts,
+             (agg.bytes_h2d + agg.feature_bytes_h2d) / 1024,
+             agg.host_decode_bytes)
+    if agg.feature_rows != results[0].n_vertices:
+        raise RuntimeError(
+            f"feature stream incomplete: {agg.feature_rows} rows for "
+            f"{results[0].n_vertices} vertices")
     batch = streamed_graph_batch(arch_id, cfg, all_shards(results),
                                  np.random.default_rng(0),
                                  n_classes=getattr(cfg, "n_classes", 7),

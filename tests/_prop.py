@@ -65,6 +65,22 @@ class Draw:
             return self.choice([1, 2])
         return self.int(1, hi)
 
+    def align(self, hi: int = 512) -> int:
+        """Block-grid vertex alignments for split_plan(align=): biased
+        toward powers of two (the ``block_size // row_stride`` values a
+        fixed-stride feature store actually produces)."""
+        if self.rng.random() < 0.7:
+            return int(2 ** self.int(0, 9))
+        return self.int(1, hi)
+
+    def shares(self, k: int) -> np.ndarray:
+        """Per-host capacity shares: mostly mild skew, sometimes one
+        host 10x the others (a straggler's inverse)."""
+        s = self.rng.uniform(0.1, 1.0, k)
+        if self.bool():
+            s[self.int(0, k - 1)] *= 10.0
+        return s / s.sum()
+
     def plan(self, csr, max_parts: int = 9) -> list:
         """An edge-balanced partition plan over ``csr`` (the same cut rule
         GraphHandle.partition_plan uses), possibly with more requested

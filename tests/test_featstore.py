@@ -1,0 +1,268 @@
+"""FeatStore: wire format, PG-Fuse path, fault injection, and the
+stream_features stage end to end (features + straggler re-splitting
+through the multi-host simulator).
+
+Tier-1 (fast) on purpose: like the multi-host suite this is the only
+coverage the feature-streaming path gets without a real cluster."""
+
+import io
+import os
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import featstore, paragrapher, pgfuse
+from repro.data.multihost import (aggregate_stats, all_shards,
+                                  resplit_shares, simulate_hosts)
+from repro.graph import (featstore_for_graph, rmat, synthesize_node_features,
+                         write_node_features)
+from tests._prop import Draw, prop
+from tests.conftest import FaultyStorage
+
+OPEN_KW = dict(use_pgfuse=True, pgfuse_block_size=1 << 14,
+               pgfuse_readahead=2)
+
+
+@pytest.fixture(scope="module")
+def graph_and_features(tmp_path_factory):
+    d = tmp_path_factory.mktemp("fs")
+    csr = rmat(9, 6, seed=3)
+    gp = str(d / "g.cbin")
+    paragrapher.save_graph(gp, csr, format="compbin")
+    fp = featstore_for_graph(gp, str(d / "g.fst"), 16, seed=0,
+                             data_align=1 << 14)
+    x = synthesize_node_features(csr.n_vertices, 16, seed=0)
+    return gp, fp, csr, x
+
+
+# ---------------------------------------------------------------------------
+# the format: roundtrip, alignment, validation
+# ---------------------------------------------------------------------------
+
+@prop()
+def test_featstore_roundtrip(draw: Draw):
+    n = draw.int(0, 300)
+    d = draw.int(1, 40)
+    dtype = draw.choice([np.float32, np.float16, np.uint8])
+    x = (draw.floats((n, d), scale=3.0).astype(dtype)
+         if dtype != np.uint8 else draw.ints(0, 255, (n, d)).astype(np.uint8))
+    blob = featstore.roundtrip_bytes(x, data_align=draw.choice([1, 64, 4096]))
+    with featstore.FeatStoreFile(io.BytesIO(blob)) as f:
+        assert (f.n_rows, f.d) == (n, d)
+        assert f.dtype == np.dtype(dtype)
+        assert np.array_equal(f.read_full(), x)
+        if n:
+            v0 = draw.int(0, n - 1)
+            v1 = draw.int(v0, n)
+            assert np.array_equal(f.read_rows(v0, v1), x[v0:v1])
+
+
+def test_featstore_data_align_and_validation(tmp_path):
+    x = np.arange(12, dtype=np.float32).reshape(3, 4)
+    p = tmp_path / "a.fst"
+    n = write_node_features(p, x, data_align=4096)
+    hdr = featstore.read_header(open(p, "rb"))
+    assert hdr.data_start == 4096 and n == 4096 + 3 * 16
+    assert hdr.row_stride == 16 and hdr.row_bytes == 16
+    assert hdr.total_size == os.path.getsize(p)
+    with pytest.raises(ValueError, match="2-D"):
+        featstore.write_featstore(io.BytesIO(), np.zeros(3))
+    with pytest.raises(ValueError, match="unsupported feature dtype"):
+        featstore.write_featstore(io.BytesIO(), np.zeros((2, 2), np.int64))
+    with pytest.raises(ValueError, match="bad magic"):
+        featstore.FeatStoreFile(io.BytesIO(b"NOPE" + b"\0" * 28))
+    with featstore.FeatStoreFile(str(p)) as f:
+        with pytest.raises(ValueError, match="bad row range"):
+            f.read_rows(0, 4)
+
+
+def test_featstore_pgfuse_reads_match_plain(graph_and_features):
+    _, fp, _, x = graph_and_features
+    with featstore.open_featstore(fp, use_pgfuse=True,
+                                  pgfuse_block_size=1 << 12,
+                                  pgfuse_readahead=2) as h:
+        assert (h.n_rows, h.d) == x.shape
+        assert np.array_equal(h.read_rows(0, h.n_rows), x)
+        assert np.array_equal(h.read_rows(7, 23), x[7:23])
+        st = h.pgfuse_stats()
+        assert st is not None and st.cache_hits + st.cache_misses > 0
+
+
+def test_featstore_mounts_into_shared_fs(graph_and_features):
+    gp, fp, _, x = graph_and_features
+    with paragrapher.open_graph(gp, **OPEN_KW) as g:
+        with featstore.open_featstore(fp, fs=g.fs) as h:
+            assert np.array_equal(h.read_rows(3, 9), x[3:9])
+            # the store's traffic is attributed to ITS file, not the
+            # graph's: per-file counters stay separable
+            assert h.pgfuse_stats().bytes_served > 0
+            assert g.pgfuse_file_stats().bytes_served \
+                < g.pgfuse_stats().bytes_served
+
+
+# ---------------------------------------------------------------------------
+# fault injection: feature reads fail loudly, like CompBin reads
+# ---------------------------------------------------------------------------
+
+def test_featstore_short_read_raises_and_retry_succeeds(graph_and_features):
+    """A short underlying read of feature rows raises IOError instead of
+    returning truncated (zero-padded) features; the claim reverts so the
+    retry reloads cleanly — the same contract CachedFile gives CompBin."""
+    _, fp, _, x = graph_and_features
+    h = featstore.open_featstore(fp, use_pgfuse=True,
+                                 pgfuse_block_size=1 << 12)
+    try:
+        faults = FaultyStorage()
+        faults.install(h.cached_file)
+        faults.truncate_at[1] = 10  # first post-install storage call
+        with pytest.raises(IOError, match="short read"):
+            h.read_rows(0, h.n_rows)
+        assert np.array_equal(h.read_rows(0, h.n_rows), x)  # transient
+        assert faults.n_calls >= 2
+    finally:
+        h.close()
+
+
+def test_featstore_transient_eio_surfaces(graph_and_features):
+    import errno
+
+    _, fp, _, x = graph_and_features
+    h = featstore.open_featstore(fp, use_pgfuse=True,
+                                 pgfuse_block_size=1 << 12)
+    try:
+        faults = FaultyStorage()
+        faults.install(h.cached_file)
+        faults.fail_at[1] = OSError(errno.EIO, "flaky OST")
+        with pytest.raises(OSError, match="flaky OST"):
+            h.read_rows(0, h.n_rows)
+        assert np.array_equal(h.read_rows(0, h.n_rows), x)
+    finally:
+        h.close()
+
+
+# ---------------------------------------------------------------------------
+# the stream_features stage end to end
+# ---------------------------------------------------------------------------
+
+def test_streamed_features_are_byte_exact(graph_and_features):
+    gp, fp, csr, x = graph_and_features
+    results = simulate_hosts(gp, 2, open_kwargs=OPEN_KW, n_parts=8,
+                             feature_path=fp)
+    shards = all_shards(results)
+    assert all(s.x is not None for s in shards)
+    got = np.concatenate([np.asarray(s.x) for s in shards])
+    assert np.array_equal(got, x)
+    agg = aggregate_stats(results)
+    assert agg.feature_rows == csr.n_vertices
+    assert agg.feature_bytes == x.nbytes == agg.feature_bytes_h2d
+    assert agg.feature_cache_hits + agg.feature_cache_misses > 0
+    assert agg.feature_read_s >= 0.0
+    d = agg.as_dict()
+    assert d["feature_hit_rate"] == agg.feature_hit_rate
+    for r in results:  # per-host stats carry real per-stage traffic
+        if r.stats.partitions:
+            assert r.stats.feature_rows == r.host_range[1] - r.host_range[0]
+
+
+def test_feature_topology_stats_stay_separable(graph_and_features):
+    """Mounting the store on the graph's fs must not leak feature
+    traffic into the topology storage counters (the per-file delta)."""
+    gp, fp, csr, x = graph_and_features
+    plain = simulate_hosts(gp, 1, open_kwargs=OPEN_KW, n_parts=8)[0]
+    featd = simulate_hosts(gp, 1, open_kwargs=OPEN_KW, n_parts=8,
+                           feature_path=fp)[0]
+    assert featd.stats.cache_hits + featd.stats.cache_misses \
+        == plain.stats.cache_hits + plain.stats.cache_misses
+    assert featd.stats.bytes_h2d == plain.stats.bytes_h2d
+    assert plain.stats.feature_rows == 0 and plain.stats.feature_bytes == 0
+
+
+def test_feature_store_row_count_must_match_graph(tmp_path,
+                                                  graph_and_features):
+    gp, _, csr, _ = graph_and_features
+    bad = tmp_path / "bad.fst"
+    write_node_features(bad, np.zeros((csr.n_vertices + 5, 4), np.float32))
+    with pytest.raises(ValueError, match="rows for a graph"):
+        simulate_hosts(gp, 1, open_kwargs=OPEN_KW, feature_path=str(bad))
+
+
+def test_short_feature_read_fails_the_stream(graph_and_features, tmp_path):
+    """A truncated feature store (rows promised by the header missing on
+    disk) surfaces as an error from the stream, not as a silent
+    zero-padded shard."""
+    gp, fp, csr, x = graph_and_features
+    blob = open(fp, "rb").read()
+    trunc = tmp_path / "trunc.fst"
+    trunc.write_bytes(blob[:-x.nbytes // 2])  # drop the tail rows
+    with pytest.raises(IOError, match="short read of feature rows"):
+        simulate_hosts(gp, 1, open_kwargs=OPEN_KW, n_parts=8,
+                       feature_path=str(trunc))
+
+
+# ---------------------------------------------------------------------------
+# straggler-aware re-splitting end to end
+# ---------------------------------------------------------------------------
+
+def test_slow_host_gets_smaller_slice_after_resplit(graph_and_features):
+    """Acceptance: a simulated slow host (injected per-request storage
+    latency) is measurably de-weighted by resplit_from_stats — its next
+    epoch streams fewer edges than its first, and fewer than its peer."""
+    gp, fp, csr, x = graph_and_features
+
+    def open_kwargs(latency_by_host):
+        def kwargs_for(i):
+            kw = dict(use_pgfuse=True, pgfuse_block_size=1 << 12)
+            lat = latency_by_host.get(i, 0.0)
+            if lat:
+                def slow_pread(fd, n, off, _lat=lat):
+                    time.sleep(_lat)
+                    return os.pread(fd, n, off)
+                kw["pgfuse_pread_fn"] = slow_pread
+            return kw
+        return kwargs_for
+
+    # warm-up epoch compiles the decode kernels so epoch-1 wall times
+    # measure storage, not jit
+    simulate_hosts(gp, 2, open_kwargs=open_kwargs({}), n_parts=8,
+                   feature_path=fp)
+    epoch1 = simulate_hosts(gp, 2, open_kwargs=open_kwargs({0: 0.08}),
+                            n_parts=8, feature_path=fp)
+    shares = resplit_shares(epoch1, floor=0.1)
+    assert shares[0] < shares[1], shares  # the straggler is de-weighted
+    epoch2 = simulate_hosts(gp, 2, open_kwargs=open_kwargs({0: 0.08}),
+                            n_parts=8, feature_path=fp, shares=shares)
+    assert epoch2[0].stats.edges < epoch1[0].stats.edges
+    assert epoch2[0].stats.edges < epoch2[1].stats.edges
+    # the re-split is still a correct cover: training sees every vertex
+    got = np.concatenate([np.asarray(s.x) for s in all_shards(epoch2)])
+    assert np.array_equal(got, x)
+
+
+def test_streamed_batch_uses_store_features(graph_and_features):
+    """launch.data_gnn.streamed_graph_batch: zero synthetic x when the
+    shards carry feature rows."""
+    from repro.launch.data_gnn import streamed_graph_batch
+    from repro.models.gnn import gcn
+
+    gp, fp, csr, x = graph_and_features
+    results = simulate_hosts(gp, 2, open_kwargs=OPEN_KW, n_parts=8,
+                             feature_path=fp)
+    cfg = gcn.GCNConfig(n_layers=2, d_hidden=16, d_in=16, n_classes=7)
+    batch = streamed_graph_batch("gcn-cora", cfg, all_shards(results),
+                                 np.random.default_rng(0),
+                                 n_vertices=results[0].n_vertices)
+    assert np.array_equal(np.asarray(batch["x"]), x)
+    # a model expecting a different width must fail loudly
+    cfg8 = gcn.GCNConfig(n_layers=2, d_hidden=16, d_in=8, n_classes=7)
+    with pytest.raises(ValueError, match="d_in"):
+        streamed_graph_batch("gcn-cora", cfg8, all_shards(results),
+                             np.random.default_rng(0))
+    # mixed featured/feature-less shards are an error, not garbage rows
+    plain = simulate_hosts(gp, 2, open_kwargs=OPEN_KW, n_parts=8)
+    mixed = sorted(all_shards(results), key=lambda s: s.v0)
+    hostless = sorted(all_shards(plain), key=lambda s: s.v0)
+    mixed[-1] = hostless[-1]
+    with pytest.raises(ValueError, match="no feature rows"):
+        streamed_graph_batch("gcn-cora", cfg, mixed,
+                             np.random.default_rng(0))

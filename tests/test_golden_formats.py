@@ -23,7 +23,7 @@ import pathlib
 import numpy as np
 import pytest
 
-from repro.core import compbin, paragrapher, webgraph
+from repro.core import compbin, featstore, paragrapher, webgraph
 from repro.core.csr import CSR
 
 GOLDEN_DIR = pathlib.Path(__file__).parent / "golden"
@@ -52,8 +52,27 @@ def golden_graphs() -> dict:
     return {"six": six, "empty": empty, "fence300": fence}
 
 
+def golden_features() -> dict:
+    """Canonical literal feature matrices pinning the FeatStore wire
+    format's edge cases: exactly representable float32 values (so the
+    fixture is byte-stable across platforms), a float16 store with a
+    padded (aligned) data section, an empty store, and a uint8 store.
+    Values are (matrix, data_align)."""
+    f32 = np.array([[0.0, 0.5, -1.25],
+                    [2.0, -0.75, 3.5],
+                    [1.0, 0.0, -2.0],
+                    [0.25, 4.0, -0.5],
+                    [-3.0, 0.125, 1.5]], dtype=np.float32)
+    f16 = np.array([[1.0, -0.5], [0.25, 2.0], [-4.0, 0.0], [0.5, -1.5]],
+                   dtype=np.float16)
+    empty = np.zeros((0, 7), dtype=np.float32)
+    bytes8 = np.array([[0, 1, 255], [128, 64, 32]], dtype=np.uint8)
+    return {"feat5x3": (f32, 64), "feat4x2h": (f16, 128),
+            "featempty": (empty, 64), "feat2x3u8": (bytes8, 64)}
+
+
 def _fixture(name: str, fmt: str) -> pathlib.Path:
-    ext = {"compbin": "cbin", "webgraph": "wg"}[fmt]
+    ext = {"compbin": "cbin", "webgraph": "wg", "featstore": "fst"}[fmt]
     return GOLDEN_DIR / f"{name}.{ext}"
 
 
@@ -103,6 +122,49 @@ def test_golden_headers_pin_section_layout():
     assert hdr2.b == 2  # 300 vertices needs 2 bytes/ID
 
 
+def _encode_features(x: np.ndarray, data_align: int) -> bytes:
+    return featstore.roundtrip_bytes(x, data_align=data_align)
+
+
+@pytest.mark.parametrize("name", sorted(golden_features()))
+def test_featstore_encoder_matches_golden_bytes(name):
+    x, data_align = golden_features()[name]
+    got = _encode_features(x, data_align)
+    want = _fixture(name, "featstore").read_bytes()
+    assert got == want, (
+        f"FeatStore wire format changed for {name!r}: "
+        f"{len(got)}B sha256={hashlib.sha256(got).hexdigest()[:16]} vs "
+        f"golden {len(want)}B "
+        f"sha256={hashlib.sha256(want).hexdigest()[:16]} — if intentional, "
+        f"bump VERSION and regenerate tests/golden (see module docstring)")
+
+
+@pytest.mark.parametrize("name", sorted(golden_features()))
+def test_featstore_decoder_reads_golden_fixture(name):
+    x, _ = golden_features()[name]
+    got = featstore.read_featstore(
+        io.BytesIO(_fixture(name, "featstore").read_bytes()))
+    assert got.dtype == x.dtype
+    assert np.array_equal(got, x)
+
+
+def test_golden_featstore_header_pins_layout():
+    """stream_features seeks to data_start + v * row_stride; pin both,
+    and pin that data_align pads the section start."""
+    hdr = featstore.read_header(
+        io.BytesIO(_fixture("feat5x3", "featstore").read_bytes()))
+    assert (hdr.n_rows, hdr.d) == (5, 3)
+    assert hdr.dtype == np.float32
+    assert hdr.row_stride == 12
+    assert hdr.data_start == 64  # one data_align unit past the header
+    assert hdr.total_size == _fixture("feat5x3", "featstore").stat().st_size
+    hdr16 = featstore.read_header(
+        io.BytesIO(_fixture("feat4x2h", "featstore").read_bytes()))
+    assert hdr16.dtype == np.float16
+    assert hdr16.row_stride == 4
+    assert hdr16.data_start == 128
+
+
 def _regenerate() -> None:
     GOLDEN_DIR.mkdir(exist_ok=True)
     for name, csr in golden_graphs().items():
@@ -111,6 +173,11 @@ def _regenerate() -> None:
             p.write_bytes(_encode(csr, fmt))
             print(f"wrote {p} ({p.stat().st_size}B "
                   f"sha256={hashlib.sha256(p.read_bytes()).hexdigest()[:16]})")
+    for name, (x, data_align) in golden_features().items():
+        p = _fixture(name, "featstore")
+        p.write_bytes(_encode_features(x, data_align))
+        print(f"wrote {p} ({p.stat().st_size}B "
+              f"sha256={hashlib.sha256(p.read_bytes()).hexdigest()[:16]})")
 
 
 if __name__ == "__main__":

@@ -5,7 +5,9 @@ stays balanced — these invariants are what the e2e tests lean on."""
 
 import numpy as np
 
-from repro.graph.partition import (host_vertex_range, split_plan,
+from repro.data.graph_stream import StreamStats
+from repro.graph.partition import (host_vertex_range, resplit_from_stats,
+                                   split_plan, stream_shares_from_stats,
                                    vertex_range_partition)
 from tests._prop import Draw, prop
 
@@ -89,6 +91,119 @@ def test_split_plan_unweighted_inherits_plan_balance(draw: Draw):
     bound = max_entries * max(per_entry)
     for s in slices:
         assert _entry_edges(csr, s) <= bound
+
+
+def _assert_tiles(slices, plan):
+    """Every vertex of the plan's coverage appears in exactly one host's
+    entries, in order (the disjoint/cover invariant for split modes that
+    may SPLIT plan entries at a cut)."""
+    if not plan:
+        assert all(not s for s in slices)
+        return
+    cursor = plan[0][0]
+    for s in slices:
+        for (a, b) in s:
+            assert a == cursor and b > a, "gap/overlap in host entries"
+            cursor = b
+    assert cursor == plan[-1][1], "hosts do not cover the plan"
+
+
+@prop()
+def test_split_plan_aligned_cuts_are_block_multiples(draw: Draw):
+    """align=: every inter-host cut vertex is a multiple of the block
+    grid, and the (possibly entry-splitting) slices still tile the
+    plan's coverage disjointly."""
+    csr = draw.csr()
+    plan = draw.plan(csr)
+    k = draw.process_count()
+    a = draw.align()
+    slices = split_plan(plan, k, align=a)
+    assert len(slices) == k
+    _assert_tiles(slices, plan)
+    nonempty = [s for s in slices if s]
+    for s in nonempty[1:]:  # interior cuts only: the grid starts at 0
+        assert host_vertex_range(s)[0] % a == 0, \
+            f"cut {host_vertex_range(s)[0]} not a multiple of align={a}"
+
+
+@prop()
+def test_split_plan_aligned_stays_balanced_on_fine_grids(draw: Draw):
+    """When the grid is fine enough to matter (>= 2 grid points per
+    host), aligned splitting stays approximately edge-balanced: each
+    host carries at most its ideal share + one plan entry + one aligned
+    snap window of edges (the cut moved < align vertices)."""
+    csr = draw.csr(max_edges=2048)
+    if csr.n_vertices < 8 or csr.n_edges == 0:
+        return
+    plan = vertex_range_partition(csr, draw.int(2, 9))
+    k = draw.process_count(hi=4)
+    a = draw.int(1, max(1, csr.n_vertices // (2 * k)))
+    weights = [int(csr.offsets[v1] - csr.offsets[v0]) for v0, v1 in plan]
+    slices = split_plan(plan, k, weights=weights, align=a)
+    _assert_tiles(slices, plan)
+    # worst extra edges any align-wide vertex window can add to a host
+    degs = np.diff(csr.offsets)
+    window = np.convolve(degs, np.ones(min(a, len(degs))), "valid").max() \
+        if len(degs) else 0
+    bound = csr.n_edges / k + max(weights, default=0) + window + 1e-9
+    for s in slices:
+        assert _entry_edges(csr, s) <= bound
+
+
+@prop()
+def test_split_plan_shares_follow_capacity(draw: Draw):
+    """shares=: per-host work respects the greedy bound
+    ``total * share_i + max(weights)`` — a host declared at half
+    capacity cannot receive more than half-plus-one-entry of the work."""
+    csr = draw.csr(max_edges=2048)
+    plan = draw.plan(csr)
+    if not plan:
+        return
+    k = draw.process_count()
+    shares = draw.shares(k)
+    weights = [int(csr.offsets[v1] - csr.offsets[v0]) for v0, v1 in plan]
+    slices = split_plan(plan, k, weights=weights, shares=shares)
+    assert [e for s in slices for e in s] == plan  # no align: exact slices
+    total = sum(weights)
+    for i, s in enumerate(slices):
+        assert _entry_edges(csr, s) <= \
+            total * shares[i] + max(weights, default=0) + 1e-9
+
+
+@prop()
+def test_stream_shares_from_stats_properties(draw: Draw):
+    """Shares from measured stats: normalized, floored (no starvation),
+    and ordered inversely to measured wall time at equal work."""
+    k = draw.process_count(hi=6)
+    work = draw.int(100, 10_000)
+    walls = [draw.float(0.1, 10.0) for _ in range(k)]
+    stats = [StreamStats(edges=work, wall_s=w) for w in walls]
+    shares = stream_shares_from_stats(stats, floor=0.25)
+    assert shares.shape == (k,)
+    assert abs(shares.sum() - 1.0) < 1e-9
+    assert shares.min() >= 0.25 / k / 2  # floored, up to renormalization
+    order = np.argsort(walls)  # fastest host first
+    assert (np.diff(shares[order]) <= 1e-9).all(), \
+        "a slower host received a larger share"
+
+
+def test_resplit_from_stats_shrinks_the_straggler():
+    """The between-epochs hook end to end: equal work, one host 4x
+    slower -> its re-split slice carries measurably less work."""
+    plan = [(i * 8, (i + 1) * 8) for i in range(16)]  # 128 vertices
+    fast = StreamStats(edges=1000, wall_s=1.0)
+    slow = StreamStats(edges=1000, wall_s=4.0)
+    slices, shares = resplit_from_stats(plan, [slow, fast], floor=0.1)
+    assert shares[0] < shares[1]
+    n0 = sum(b - a for a, b in slices[0])
+    n1 = sum(b - a for a, b in slices[1])
+    assert n0 < n1, (n0, n1)
+    assert n0 <= 128 * 0.3  # ~1/5 share, one-entry granularity slack
+    _assert_tiles(slices, plan)
+    # hosts with no measurement fall back to the measured mean
+    empty = StreamStats()
+    shares3 = stream_shares_from_stats([slow, fast, empty], floor=0.1)
+    assert shares3[0] < shares3[2] < shares3[1]
 
 
 @prop()
