@@ -1,20 +1,33 @@
 """BENCH json regression gate (CI's bench lane).
 
-Compares a freshly produced ``BENCH_*.json`` against the committed
-baseline and fails when any tracked throughput metric regresses more
-than the allowed fraction:
+Compares freshly produced ``BENCH_*.json`` files against the committed
+baseline and fails when any tracked metric regresses more than the
+allowed fraction:
 
     PYTHONPATH=src python -m benchmarks.compare BENCH_baseline.json \
-        BENCH_loading.json --max-regression 0.30
+        BENCH_loading.json BENCH_query.json --max-regression 0.30
 
-Only the ``tracked`` section is gated.  Those metrics are deliberately
-derived from the SimStorage *virtual* clock and deterministic byte
-counters (see ``benchmarks/loading.py::run``) so they measure the
-loader's request pattern — enlarged blocks, readahead, cache hit rates,
-packed H2D transfer — not the speed of whichever machine CI landed on.
-Everything else in the json (wall-clock decode times etc.) is advisory
-and reported without gating.  Improvements are never an error; refresh
-the baseline deliberately when one should become the new floor.
+Two gated sections, two directions:
+
+* ``tracked`` — throughputs / rates where HIGHER is better: the gate
+  fails when a metric drops more than the allowed fraction below the
+  baseline.
+* ``tracked_lower`` — latencies / charged time where LOWER is better:
+  the gate fails when a metric RISES more than the allowed fraction
+  above the baseline.
+
+Several current files may be passed (one per suite); their sections are
+merged before gating, so one committed ``BENCH_baseline.json`` holds the
+union of every suite's gated metrics.  All gated metrics are
+deliberately derived from the SimStorage *virtual* clock and
+deterministic byte counters (see ``benchmarks/loading.py::run`` and
+``benchmarks/query.py::run``) so they measure the loader's/engine's
+request pattern — enlarged blocks, readahead, cache hit rates, packed
+H2D transfer, query coalescing — not the speed of whichever machine CI
+landed on.  Everything else in the json (wall-clock decode times etc.)
+is advisory and reported without gating.  Improvements are never an
+error; refresh the baseline deliberately when one should become the new
+floor.
 """
 
 from __future__ import annotations
@@ -24,53 +37,99 @@ import json
 import sys
 
 
-def compare(baseline: dict, current: dict, max_regression: float
-            ) -> tuple[list[str], list[str]]:
-    """Returns (report_lines, failures)."""
-    base_tracked = baseline.get("tracked", {})
-    cur_tracked = current.get("tracked", {})
+def _gate_section(base: dict, cur: dict, max_regression: float,
+                  lower_is_better: bool) -> tuple[list[str], list[str]]:
     lines, failures = [], []
-    if not base_tracked:
-        failures.append("baseline has no 'tracked' section")
-        return lines, failures
-    for key in sorted(base_tracked):
-        old = base_tracked[key]
+    for key in sorted(base):
+        old = base[key]
         if not isinstance(old, (int, float)):
             continue
-        if key not in cur_tracked:
+        if key not in cur:
             failures.append(f"{key}: missing from current BENCH json")
             continue
-        new = cur_tracked[key]
+        new = cur[key]
         if old <= 0:  # nothing to gate against; report only
             lines.append(f"  {key:<28} {old:>12.4g} -> {new:>12.4g}  (ungated)")
             continue
         ratio = new / old
-        status = "OK" if ratio >= 1.0 - max_regression else "REGRESSED"
+        if lower_is_better:
+            ok = ratio <= 1.0 + max_regression
+        else:
+            ok = ratio >= 1.0 - max_regression
+        status = "OK" if ok else "REGRESSED"
         lines.append(f"  {key:<28} {old:>12.4g} -> {new:>12.4g}  "
                      f"({ratio:6.2%}) {status}")
-        if status == "REGRESSED":
+        if not ok:
+            word = "above" if lower_is_better else "below"
             failures.append(
-                f"{key}: {new:.4g} is {1 - ratio:.1%} below baseline "
+                f"{key}: {new:.4g} is {abs(1 - ratio):.1%} {word} baseline "
                 f"{old:.4g} (allowed {max_regression:.0%})")
+    return lines, failures
+
+
+def merge_tracked(currents: list[dict]) -> dict:
+    """Union of the gated sections across several suites' BENCH dicts.
+
+    A metric name owned by two suites would gate ambiguously, so
+    collisions are an error rather than a silent last-writer-wins.
+    """
+    merged = {"tracked": {}, "tracked_lower": {}}
+    for cur in currents:
+        for section in merged:
+            for k, v in cur.get(section, {}).items():
+                if k in merged[section]:
+                    raise ValueError(
+                        f"metric {k!r} appears in more than one BENCH json; "
+                        f"gated metric names must be unique across suites")
+                merged[section][k] = v
+    return merged
+
+
+def compare(baseline: dict, current: dict, max_regression: float
+            ) -> tuple[list[str], list[str]]:
+    """Returns (report_lines, failures).  ``current`` may be one suite's
+    dict or the :func:`merge_tracked` union of several."""
+    lines, failures = [], []
+    if not baseline.get("tracked") and not baseline.get("tracked_lower"):
+        failures.append("baseline has no 'tracked'/'tracked_lower' section")
+        return lines, failures
+    up_lines, up_fail = _gate_section(
+        baseline.get("tracked", {}), current.get("tracked", {}),
+        max_regression, lower_is_better=False)
+    down_lines, down_fail = _gate_section(
+        baseline.get("tracked_lower", {}), current.get("tracked_lower", {}),
+        max_regression, lower_is_better=True)
+    lines.extend(up_lines)
+    if down_lines:
+        lines.append("  -- lower is better --")
+        lines.extend(down_lines)
+    failures.extend(up_fail)
+    failures.extend(down_fail)
     return lines, failures
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
-        description="fail if tracked BENCH throughput regressed")
+        description="fail if tracked BENCH metrics regressed")
     ap.add_argument("baseline", help="committed BENCH_baseline.json")
-    ap.add_argument("current", help="freshly produced BENCH_*.json")
+    ap.add_argument("current", nargs="+",
+                    help="freshly produced BENCH_*.json (one per suite; "
+                         "gated sections are merged)")
     ap.add_argument("--max-regression", type=float, default=0.30,
-                    help="allowed fractional drop per metric (default 0.30)")
+                    help="allowed fractional change per metric "
+                         "(default 0.30)")
     args = ap.parse_args(argv)
 
     with open(args.baseline) as f:
         baseline = json.load(f)
-    with open(args.current) as f:
-        current = json.load(f)
+    currents = []
+    for path in args.current:
+        with open(path) as f:
+            currents.append(json.load(f))
+    current = merge_tracked(currents)
 
     lines, failures = compare(baseline, current, args.max_regression)
-    print(f"tracked metrics ({args.baseline} -> {args.current}, "
+    print(f"tracked metrics ({args.baseline} -> {', '.join(args.current)}, "
           f"max regression {args.max_regression:.0%}):")
     for line in lines:
         print(line)

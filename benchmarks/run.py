@@ -80,12 +80,27 @@ def _suite_loading(args) -> None:
                 out=args.bench_out)
 
 
+def _suite_query(args) -> None:
+    """Random-access query engine vs sequential policy on a zipf trace ->
+    BENCH_query.json (virtual-clock p50/p99 latency + hit rate, gated
+    downward/upward respectively by the bench lane)."""
+    from benchmarks import query
+
+    print("=" * 72)
+    print("Query — random-access neighbor engine (emits BENCH json)")
+    print("=" * 72)
+    query.run(workdir=args.workdir, profile=args.profile,
+              scale=14 if args.fast else 17,
+              out=args.query_out)
+
+
 #: registered suites, executed in order by default — add new benchmark
 #: harnesses here so ``python -m benchmarks.run`` stays the one entry
 #: point that emits every artifact (CSV blocks and BENCH_*.json alike)
 SUITES = {
     "figs": _suite_figs,
     "loading": _suite_loading,
+    "query": _suite_query,
 }
 
 
@@ -102,6 +117,8 @@ def main() -> None:
                     help="simulated hosts for the loading suite")
     ap.add_argument("--bench-out", default="BENCH_loading.json",
                     help="where the loading suite writes its BENCH json")
+    ap.add_argument("--query-out", default="BENCH_query.json",
+                    help="where the query suite writes its BENCH json")
     args = ap.parse_args()
 
     picked = [s.strip() for s in args.suites.split(",") if s.strip()]

@@ -14,8 +14,12 @@ cache — the single-node rehearsal of a multi-host cluster load.  Run:
     PYTHONPATH=src python examples/train_gnn_from_compbin.py --hosts 2
     PYTHONPATH=src python examples/train_gnn_from_compbin.py --sampled
 
-``--sampled`` keeps the older minibatch regime: reassemble a host CSR
-from the streamed shards and train on sampled neighborhood blocks.
+``--sampled`` switches to the random-access regime: minibatch blocks are
+drawn through the :mod:`repro.query` neighbor-query engine (deduplicated,
+coalesced CompBin reads under the PG-Fuse random-access policy), with
+features and seed labels gathered from the column-family stores on the
+same mount.  Both regimes stream the label/mask family, so NO tensor in
+the batch is synthesized on the host.
 """
 
 import argparse
@@ -29,13 +33,16 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax
 import numpy as np
 
-from repro.core import paragrapher, policy
-from repro.data import (PrefetchIterator, aggregate_stats, all_shards,
-                        assemble_csr, simulate_hosts)
-from repro.graph import NeighborSampler, featstore_for_graph, rmat
-from repro.launch.data_gnn import block_to_batch, streamed_graph_batch
+from repro.core import featstore, paragrapher, policy
+from repro.data import aggregate_stats, all_shards, simulate_hosts
+from repro.graph import (NeighborSampler, featstore_for_graph,
+                         labelstore_for_graph, rmat,
+                         synthesize_node_features,
+                         synthesize_separable_labels)
+from repro.launch.data_gnn import sampled_store_batch, streamed_graph_batch
 from repro.models.gnn import gcn
 from repro.optim import AdamWConfig, adamw_init, adamw_update
+from repro.query import NeighborQueryEngine
 
 
 def _print_host_stats(results) -> None:
@@ -79,22 +86,13 @@ def main() -> None:
                             data_align=block_size)
         print(f"wrote {os.path.getsize(feat_path)/2**20:.1f} MiB feature "
               f"store ({d_in} float32/row)")
-
-    # storage -> PG-Fuse -> packed CompBin + feature rows -> device, per
-    # host; cut vertices snap to the feature block grid so neighboring
-    # hosts' caches never fetch the same feature block.  --sampled
-    # synthesizes block features itself, so it skips the feature stream.
-    with paragrapher.open_graph(path) as g:
-        align = policy.choose_feature_align(block_size, d_in * 4,
-                                            g.n_vertices, args.hosts)
-    results = simulate_hosts(
-        path, args.hosts,
-        open_kwargs=dict(use_pgfuse=True, pgfuse_block_size=block_size,
-                         pgfuse_readahead=2),
-        n_buffers=2, readahead=2,
-        feature_path=None if args.sampled else feat_path, align=align)
-    _print_host_stats(results)
-    shards = all_shards(results)
+    label_path = os.path.join(args.workdir, "graph_labels.lbl")
+    if not os.path.exists(label_path):
+        with paragrapher.open_graph(path) as g:
+            x = synthesize_node_features(g.n_vertices, d_in, seed=0)
+        labelstore_for_graph(path, label_path, 8, seed=0,
+                             labels=synthesize_separable_labels(x, 8),
+                             data_align=block_size)
 
     cfg = gcn.GCNConfig(n_layers=2, d_hidden=32, d_in=32, n_classes=8)
     params = gcn.init_params(cfg, jax.random.key(0))
@@ -109,20 +107,46 @@ def main() -> None:
         return params, opt, loss
 
     if args.sampled:
-        # minibatch regime: reassemble a host CSR once, sample blocks
-        csr_mem = assemble_csr(shards)
-        sampler = NeighborSampler(csr_mem, fanouts=(10, 5), seed=0)
+        # random-access regime: adjacency through the query engine
+        # (dedup + coalesced span fetches), features + seed labels
+        # gathered from the column-family stores on the SAME mount
+        amode = policy.choose_access_mode("sample")
+        g = paragrapher.open_graph(
+            path, use_pgfuse=True, pgfuse_block_size=block_size,
+            pgfuse_readahead=amode.readahead,
+            pgfuse_eviction=amode.eviction)
+        feats = featstore.open_featstore(feat_path, fs=g.fs,
+                                         pgfuse_file_readahead=0)
+        labels = featstore.open_featstore(label_path, fs=g.fs,
+                                          pgfuse_file_readahead=0)
+        engine = NeighborQueryEngine(g)
+        sampler = NeighborSampler(engine, fanouts=(10, 5), seed=0)
+        print(f"sampled regime: {amode.reason}")
 
         def batches():
             while True:
-                seeds = rng.integers(0, csr_mem.n_vertices, args.batch_nodes)
-                yield block_to_batch("gcn-cora", cfg, sampler.sample(seeds),
-                                     rng)
+                seeds = rng.integers(0, g.n_vertices, args.batch_nodes)
+                yield sampled_store_batch("gcn-cora", cfg,
+                                          sampler.sample(seeds), feats,
+                                          labels)
 
-        it = PrefetchIterator(batches(), depth=2)
+        it = batches()
     else:
         # full-graph regime: the streamed shards ARE the training batch —
-        # the neighbor IDs never existed decoded on the host
+        # neighbor IDs never exist decoded on the host, and features AND
+        # labels ride the same stream; cut vertices snap to the feature
+        # block grid so neighboring hosts' caches never double-fetch
+        with paragrapher.open_graph(path) as g:
+            align = policy.choose_feature_align(block_size, d_in * 4,
+                                                g.n_vertices, args.hosts)
+        results = simulate_hosts(
+            path, args.hosts,
+            open_kwargs=dict(use_pgfuse=True, pgfuse_block_size=block_size,
+                             pgfuse_readahead=2),
+            n_buffers=2, readahead=2, feature_path=feat_path,
+            label_path=label_path, align=align)
+        _print_host_stats(results)
+        shards = all_shards(results)
         batch = streamed_graph_batch("gcn-cora", cfg, shards, rng,
                                      n_classes=cfg.n_classes,
                                      n_vertices=results[0].n_vertices)
@@ -137,6 +161,15 @@ def main() -> None:
     mode = "sampled" if args.sampled else "full-graph"
     print(f"\n{args.steps} {mode} steps in {dt:.1f}s "
           f"({args.steps/dt:.1f} steps/s)")
+    if args.sampled:
+        st = engine.stats
+        print(f"query engine: {st.batches} coalesced batches, dedup "
+              f"{st.dedup_ratio:.2f}x, {st.blocks_touched} blocks touched, "
+              f"p50 {st.p50_s*1e3:.2f} ms")
+        engine.close()
+        feats.close()
+        labels.close()
+        g.close()
 
 
 if __name__ == "__main__":

@@ -254,7 +254,9 @@ class FeatureStoreHandle:
                  pgfuse_block_size: int = pgfuse.DEFAULT_BLOCK_SIZE,
                  pgfuse_max_resident_bytes: Optional[int] = None,
                  pgfuse_readahead: int = 0,
-                 pgfuse_pread_fn=None):
+                 pgfuse_pread_fn=None,
+                 pgfuse_file_budget: Optional[int] = None,
+                 pgfuse_file_readahead: Optional[int] = None):
         self.path = os.fspath(path)
         self._owns_fs = False
         self._fs = fs
@@ -267,7 +269,13 @@ class FeatureStoreHandle:
             self._owns_fs = True
         self._cf: Optional[pgfuse.CachedFile] = None
         if self._fs is not None:
-            self._cf = self._fs.mount(self.path)
+            # ``pgfuse_file_budget`` caps THIS store's share of the shared
+            # mount (so feature churn cannot evict the graph's hot offset
+            # blocks) and ``pgfuse_file_readahead`` overrides the mount's
+            # readahead for this file only (0 for random row gathers)
+            self._cf = self._fs.mount(
+                self.path, max_resident_bytes=pgfuse_file_budget,
+                readahead=pgfuse_file_readahead)
         self._closed = False
         rdr = self._reader()  # validates the header eagerly
         self.header = rdr.header

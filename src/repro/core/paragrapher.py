@@ -68,7 +68,10 @@ class GraphHandle:
                  pgfuse_block_size: int = pgfuse.DEFAULT_BLOCK_SIZE,
                  pgfuse_max_resident_bytes: Optional[int] = None,
                  pgfuse_readahead: int = 0,
-                 pgfuse_pread_fn=None):
+                 pgfuse_pread_fn=None,
+                 pgfuse_eviction: str = pgfuse.EVICT_LRU,
+                 pgfuse_retries: int = 0,
+                 pgfuse_retry_backoff_s: float = 0.005):
         self.path = os.fspath(path)
         self.format = detect_format(path) if format == "auto" else format
         self._fs: Optional[pgfuse.PGFuseFS] = None
@@ -78,6 +81,9 @@ class GraphHandle:
                 max_resident_bytes=pgfuse_max_resident_bytes,
                 readahead=pgfuse_readahead,
                 pread_fn=pgfuse_pread_fn,
+                eviction=pgfuse_eviction,
+                retries=pgfuse_retries,
+                retry_backoff_s=pgfuse_retry_backoff_s,
             )
             self._fs.mount(self.path)
         self._closed = False
@@ -316,7 +322,10 @@ def open_graph(path: Union[str, os.PathLike], *, format: str = "auto",
                pgfuse_block_size: int = pgfuse.DEFAULT_BLOCK_SIZE,
                pgfuse_max_resident_bytes: Optional[int] = None,
                pgfuse_readahead: int = 0,
-               pgfuse_pread_fn=None) -> GraphHandle:
+               pgfuse_pread_fn=None,
+               pgfuse_eviction: str = pgfuse.EVICT_LRU,
+               pgfuse_retries: int = 0,
+               pgfuse_retry_backoff_s: float = 0.005) -> GraphHandle:
     """Open a graph for loading (the ParaGrapher entry point).
 
     ``use_pgfuse=True`` mounts the file in the PG-Fuse block cache
@@ -324,6 +333,11 @@ def open_graph(path: Union[str, os.PathLike], *, format: str = "auto",
     ``pgfuse_readahead`` loads that many extra blocks per miss in one
     enlarged request (sequential-scan prefetch for the streaming loader);
     ``pgfuse_pread_fn`` injects a storage backend (benchmarks/tests).
+    ``pgfuse_eviction`` picks the replacement policy ("lru" for
+    sequential scans, "clock" for random adjacency queries — see
+    :func:`repro.core.policy.choose_access_mode`) and ``pgfuse_retries``
+    bounds transient-EIO retries per underlying read (deterministic
+    ``pgfuse_retry_backoff_s * attempt`` backoff).
     """
     return GraphHandle(
         path, format=format, use_pgfuse=use_pgfuse,
@@ -331,6 +345,9 @@ def open_graph(path: Union[str, os.PathLike], *, format: str = "auto",
         pgfuse_max_resident_bytes=pgfuse_max_resident_bytes,
         pgfuse_readahead=pgfuse_readahead,
         pgfuse_pread_fn=pgfuse_pread_fn,
+        pgfuse_eviction=pgfuse_eviction,
+        pgfuse_retries=pgfuse_retries,
+        pgfuse_retry_backoff_s=pgfuse_retry_backoff_s,
     )
 
 

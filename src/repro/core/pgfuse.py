@@ -27,6 +27,20 @@ Transitions::
 
      -1 --cas--> -2 --load--> 1 --release--> 0 --acquire--> 1,2,3,...
       0 --cas--> -3 --free--> -1
+
+Replacement policy (access-pattern split): sequential scans want pure
+recency (LRU) — every block is touched once and never again, so evicting
+the oldest is exact.  Random adjacency queries ("Making Caches Work for
+Graph Analytics", arXiv:1608.01362) break that assumption: the hot set
+(offset-array blocks, high-degree hubs) is re-touched at irregular
+intervals and a strict recency order evicts it whenever one large batch
+touches many cold packed-byte blocks in between.  ``eviction="clock"``
+keeps a second-chance reference bit per block instead: a sweep clears
+bits before revoking, so any block re-touched since the last sweep
+survives the batch churn.  ``CachedFile(max_resident_bytes=...)`` adds a
+per-file cap on top of the mount-wide budget, bounding how much of the
+shared budget one file's churn may claim (e.g. cap the packed-neighbor /
+feature-store traffic so the hot offset blocks are never the victims).
 """
 
 from __future__ import annotations
@@ -47,6 +61,11 @@ REVOKING = -3
 
 DEFAULT_BLOCK_SIZE = 32 * 2**20  # 32 MiB (paper §III)
 
+# Replacement policies (choose via core.policy.choose_access_mode)
+EVICT_LRU = "lru"          # exact recency order — sequential scans
+EVICT_CLOCK = "clock"      # second-chance ref bits — random access
+EVICTION_POLICIES = (EVICT_LRU, EVICT_CLOCK)
+
 
 @dataclasses.dataclass
 class PGFuseStats:
@@ -58,6 +77,11 @@ class PGFuseStats:
     evictions: int = 0             # blocks revoked
     bytes_served: int = 0          # bytes returned to consumers
     readahead_blocks: int = 0      # blocks loaded ahead of any request
+    span_fetch_blocks: int = 0     # blocks installed by prefetch_range
+                                   # (consumer-announced spans, one
+                                   # enlarged request per NOT_LOADED run)
+    retried_reads: int = 0         # transient-fault retries that went back
+                                   # to storage (see CachedFile retries=)
 
     def merge(self, other: "PGFuseStats") -> None:
         for f in dataclasses.fields(self):
@@ -116,7 +140,11 @@ class CachedFile:
                  block_size: int = DEFAULT_BLOCK_SIZE,
                  fs: Optional["PGFuseFS"] = None,
                  pread_fn=None,
-                 readahead: int = 0):
+                 readahead: int = 0,
+                 eviction: str = EVICT_LRU,
+                 max_resident_bytes: Optional[int] = None,
+                 retries: int = 0,
+                 retry_backoff_s: float = 0.005):
         self.path = os.fspath(path)
         self.block_size = int(block_size)
         self.readahead = int(readahead)
@@ -124,6 +152,18 @@ class CachedFile:
             raise ValueError("block_size must be positive")
         if self.readahead < 0:
             raise ValueError("readahead must be >= 0")
+        if eviction not in EVICTION_POLICIES:
+            raise ValueError(f"eviction must be one of {EVICTION_POLICIES}, "
+                             f"got {eviction!r}")
+        if retries < 0:
+            raise ValueError("retries must be >= 0")
+        self.eviction = eviction
+        # per-FILE resident cap (on top of any mount-wide budget): bounds
+        # how much cache this file's traffic may claim, so one file's
+        # churn cannot evict another file's hot blocks
+        self.max_resident_bytes = max_resident_bytes
+        self.retries = int(retries)
+        self.retry_backoff_s = float(retry_backoff_s)
         self._fd = os.open(self.path, os.O_RDONLY)
         self.size = os.fstat(self._fd).st_size
         # injectable storage backend (benchmarks emulate Lustre/HDD
@@ -138,12 +178,22 @@ class CachedFile:
         # loader's steady state)
         self._resident_set: set[int] = set()
         self._resident_lock = threading.Lock()
+        self._resident_bytes = 0
         self._last_access = np.zeros(self.n_blocks, dtype=np.float64)
+        # second-chance reference bits (eviction="clock"): set on every
+        # acquisition, cleared by an eviction sweep — a block re-touched
+        # between sweeps survives one round of pressure
+        self._ref = np.zeros(self.n_blocks, dtype=bool)
+        self._clock_hand = 0
         self._cond = threading.Condition()
         self.stats = PGFuseStats()
         self._stats_lock = threading.Lock()
         self._fs = fs
         self._closed = False
+
+    @property
+    def resident_bytes(self) -> int:
+        return self._resident_bytes
 
     # -- block acquisition (Fig. 1) ---------------------------------------
     def _read_underlying_range(self, b0: int, n_blocks: int) -> bytes:
@@ -154,6 +204,29 @@ class CachedFile:
             self.stats.underlying_reads += 1
             self.stats.underlying_bytes += len(data)
         return data
+
+    def _read_with_retry(self, b0: int, n_blocks: int) -> bytes:
+        """Bounded-retry wrapper over :meth:`_read_underlying_range`.
+
+        The paper's Lustre deployments see *transient* OST errors (EIO
+        that succeeds on the next attempt); with ``retries=r`` such an
+        error is retried up to ``r`` times with a deterministic linear
+        backoff (``retry_backoff_s * attempt``) before surfacing.  The
+        retry sits ABOVE the underlying-read funnel so injected faults
+        (tests/conftest.py::FaultyStorage wraps ``_read_underlying_range``)
+        exercise the same policy a real storage error would.
+        """
+        attempt = 0
+        while True:
+            try:
+                return self._read_underlying_range(b0, n_blocks)
+            except OSError:
+                if attempt >= self.retries:
+                    raise
+                attempt += 1
+                with self._stats_lock:
+                    self.stats.retried_reads += 1
+                time.sleep(self.retry_backoff_s * attempt)
 
     def _claim_readahead(self, b: int) -> list[int]:
         """Claim (-1 -> -2) a contiguous run [b, b+1, ...] for one load.
@@ -180,6 +253,7 @@ class CachedFile:
             if self._statuses.add_reader(b):          # s >= 0 -> s+1
                 data = self._blocks[b]
                 assert data is not None
+                self._ref[b] = True  # second chance: re-touched since sweep
                 with self._stats_lock:
                     self.stats.cache_hits += 1
                     if waited:
@@ -198,7 +272,7 @@ class CachedFile:
                         self._cond.notify_all()
                     raise ValueError("acquire on closed CachedFile")
                 try:
-                    run = self._read_underlying_range(b, len(claimed))
+                    run = self._read_with_retry(b, len(claimed))
                 except BaseException:
                     for c in claimed:
                         ok = self._statuses.cas(c, LOADING, NOT_LOADED)
@@ -234,7 +308,12 @@ class CachedFile:
                     self._blocks[c] = chunk
                     with self._resident_lock:
                         self._resident_set.add(c)
+                        self._resident_bytes += len(chunk)
                     self._last_access[c] = now
+                    # the requested block was demanded (ref set); readahead
+                    # installs start cold — unconsumed prefetch is the
+                    # first thing a clock sweep should reclaim
+                    self._ref[c] = c == b
                     if self._fs is not None:
                         self._fs._resident_delta(len(chunk))
                     # loader becomes reader #1 of b; readahead blocks go idle
@@ -248,6 +327,7 @@ class CachedFile:
                         self.stats.waits += 1
                 with self._cond:
                     self._cond.notify_all()
+                self._enforce_file_budget()
                 return self._blocks[b]
             # s is LOADING or REVOKING: wait for the owning thread
             waited = True
@@ -264,6 +344,89 @@ class CachedFile:
         if self._fs is not None:
             self._fs._maybe_evict()
 
+    def prefetch_range(self, offset: int, size: int) -> int:
+        """Load every block overlapping [offset, offset+size), fetching
+        each contiguous NOT_LOADED run with ONE enlarged request.
+
+        The random-access primitive: a consumer that knows its request
+        span up front (the query engine's merged packed-byte gathers)
+        announces it here, so a cold multi-block span costs one storage
+        request instead of one per block — the paper's enlarged-requests
+        argument applied to request-shaped fetches rather than
+        speculative readahead.  Returns the number of blocks loaded.
+        Resident/loading blocks are skipped; short underlying reads drop
+        the affected blocks silently (the eventual :meth:`pread` of a
+        dropped block surfaces the error through the strict path).
+        """
+        if self._closed or size <= 0:
+            return 0
+        offset = max(0, offset)
+        size = min(size, self.size - offset)
+        if size <= 0:
+            return 0
+        # a span that cannot fit the budget would be installed and then
+        # partially evicted before the consuming read arrives — strictly
+        # worse (same bytes fetched twice) than letting pread() walk the
+        # blocks itself, so decline and let the strict path handle it
+        budget = self.max_resident_bytes
+        if self._fs is not None and self._fs.max_resident_bytes is not None:
+            budget = (self._fs.max_resident_bytes if budget is None
+                      else min(budget, self._fs.max_resident_bytes))
+        if budget is not None and size > budget:
+            return 0
+        b0 = offset // self.block_size
+        b1 = (offset + size - 1) // self.block_size
+        loaded = 0
+        b = b0
+        while b <= b1:
+            if not self._statuses.cas(b, NOT_LOADED, LOADING):
+                b += 1
+                continue
+            claimed = [b]
+            nxt = b + 1
+            while nxt <= b1 and self._statuses.cas(nxt, NOT_LOADED, LOADING):
+                claimed.append(nxt)
+                nxt += 1
+            try:
+                run = self._read_with_retry(b, len(claimed))
+            except BaseException:
+                for c in claimed:
+                    ok = self._statuses.cas(c, LOADING, NOT_LOADED)
+                    assert ok
+                with self._cond:
+                    self._cond.notify_all()
+                raise
+            now = time.monotonic()
+            installed = 0
+            for j, c in enumerate(claimed):
+                expected = min(self.block_size, self.size - c * self.block_size)
+                chunk = run[j * self.block_size : j * self.block_size + expected]
+                if len(chunk) < expected:
+                    ok = self._statuses.cas(c, LOADING, NOT_LOADED)
+                    assert ok
+                    continue
+                self._blocks[c] = chunk
+                with self._resident_lock:
+                    self._resident_set.add(c)
+                    self._resident_bytes += len(chunk)
+                self._last_access[c] = now
+                self._ref[c] = True  # the consumer announced it wants these
+                if self._fs is not None:
+                    self._fs._resident_delta(len(chunk))
+                ok = self._statuses.cas(c, LOADING, LOADED)
+                assert ok
+                installed += 1
+            with self._stats_lock:
+                self.stats.span_fetch_blocks += installed
+            with self._cond:
+                self._cond.notify_all()
+            loaded += installed
+            b = nxt
+        self._enforce_file_budget()
+        if self._fs is not None:
+            self._fs._maybe_evict()
+        return loaded
+
     # -- eviction (revocation by last-access time) -------------------------
     def try_revoke(self, b: int) -> int:
         """Attempt 0 -> -3 -> free -> -1.  Returns bytes freed (0 if busy)."""
@@ -271,9 +434,11 @@ class CachedFile:
             return 0
         data = self._blocks[b]
         self._blocks[b] = None
+        freed = len(data) if data is not None else 0
         with self._resident_lock:
             self._resident_set.discard(b)
-        freed = len(data) if data is not None else 0
+            self._resident_bytes -= freed
+        self._ref[b] = False
         ok = self._statuses.cas(b, REVOKING, NOT_LOADED)
         assert ok
         with self._stats_lock:
@@ -281,6 +446,64 @@ class CachedFile:
         with self._cond:
             self._cond.notify_all()
         return freed
+
+    def sweep(self, need_bytes: int) -> int:
+        """Revoke idle blocks until ``need_bytes`` are freed (or no more
+        victims exist).  Victim order follows ``self.eviction``:
+
+        * ``"lru"`` — strict last-access order (exact recency);
+        * ``"clock"`` — second chance: the hand walks a snapshot of the
+          resident blocks in index order from where it last stopped; a
+          set reference bit buys the block one lap (the bit is cleared,
+          the hand moves on), a clear bit makes it the victim.  Two laps
+          bound the walk — after the first every survivor's bit is clear.
+
+        Returns bytes actually freed.
+        """
+        freed = 0
+        if self.eviction == EVICT_CLOCK:
+            for _lap in range(2):
+                if freed >= need_bytes:
+                    break
+                resident = self.resident_blocks()  # one snapshot per lap
+                if resident.size == 0:
+                    break
+                start = int(np.searchsorted(resident, self._clock_hand))
+                order = np.concatenate([resident[start:], resident[:start]])
+                for b in order:
+                    if freed >= need_bytes:
+                        break
+                    b = int(b)
+                    self._clock_hand = b + 1
+                    if self._ref[b]:
+                        self._ref[b] = False  # second chance spent
+                        continue
+                    freed += self.try_revoke(b)
+        else:
+            order = sorted(self.resident_blocks(),
+                           key=lambda b: self._last_access[b])
+            for b in order:
+                if freed >= need_bytes:
+                    break
+                freed += self.try_revoke(b)
+        return freed
+
+    def _enforce_file_budget(self) -> None:
+        """Keep this FILE inside its own resident cap (when it has one).
+
+        The per-file budget is what keeps a churning byte stream (packed
+        neighbors under random queries, a feature store scan) from
+        claiming the whole mount-wide budget and evicting another file's
+        hot blocks: the churner reclaims from ITSELF first.
+        """
+        if self.max_resident_bytes is None:
+            return
+        over = self._resident_bytes - self.max_resident_bytes
+        if over <= 0:
+            return
+        freed = self.sweep(over)
+        if freed and self._fs is not None:
+            self._fs._resident_delta(-freed)
 
     def resident_blocks(self) -> np.ndarray:
         with self._resident_lock:
@@ -350,6 +573,7 @@ class CachedFile:
                         self._blocks[b] = None
                         with self._resident_lock:
                             self._resident_set.discard(b)
+                            self._resident_bytes -= len(data)
                 if self._fs is not None and freed:
                     self._fs._resident_delta(-freed)
                 break
@@ -408,11 +632,25 @@ class PGFuseFS:
     def __init__(self, *, block_size: int = DEFAULT_BLOCK_SIZE,
                  max_resident_bytes: Optional[int] = None,
                  pread_fn=None,
-                 readahead: int = 0):
+                 readahead: int = 0,
+                 eviction: str = EVICT_LRU,
+                 file_budgets: Optional[Dict[str, int]] = None,
+                 retries: int = 0,
+                 retry_backoff_s: float = 0.005):
+        if eviction not in EVICTION_POLICIES:
+            raise ValueError(f"eviction must be one of {EVICTION_POLICIES}, "
+                             f"got {eviction!r}")
         self.block_size = block_size
         self.max_resident_bytes = max_resident_bytes
         self.pread_fn = pread_fn
         self.readahead = int(readahead)
+        self.eviction = eviction
+        self.retries = int(retries)
+        self.retry_backoff_s = float(retry_backoff_s)
+        # per-file resident caps keyed by fspath; applied at mount() and
+        # retroactively by set_file_budget()
+        self._file_budgets = {os.fspath(k): int(v)
+                              for k, v in (file_budgets or {}).items()}
         self._files: Dict[str, CachedFile] = {}
         self._lock = threading.Lock()
         self._resident = 0
@@ -425,35 +663,107 @@ class PGFuseFS:
     def resident_bytes(self) -> int:
         return self._resident
 
-    def _maybe_evict(self) -> None:
-        """Revoke least-recently-used idle blocks while over budget."""
-        if self.max_resident_bytes is None or self._resident <= self.max_resident_bytes:
-            return
-        # Gather (last_access, file, block) for all resident idle candidates.
-        candidates = []
-        with self._lock:
-            files = list(self._files.values())
-        for cf in files:
-            for b in cf.resident_blocks():
-                candidates.append((cf._last_access[b], cf, int(b)))
-        candidates.sort(key=lambda t: t[0])
-        for _, cf, b in candidates:
-            if self._resident <= self.max_resident_bytes:
-                break
-            freed = cf.try_revoke(b)
-            if freed:
-                self._resident_delta(-freed)
+    def set_file_budget(self, path: Union[str, os.PathLike],
+                        max_resident_bytes: Optional[int]) -> None:
+        """Cap (or uncap, with None) one file's share of the cache.
 
-    def mount(self, path: Union[str, os.PathLike]) -> CachedFile:
+        Applies to an already-mounted file immediately: an over-budget
+        file sweeps itself down on its next install (and right here, so
+        the cap holds even for a file that is never read again).
+        """
         key = os.fspath(path)
         with self._lock:
+            if max_resident_bytes is None:
+                self._file_budgets.pop(key, None)
+            else:
+                self._file_budgets[key] = int(max_resident_bytes)
+            cf = self._files.get(key)
+        if cf is not None:
+            cf.max_resident_bytes = max_resident_bytes
+            cf._enforce_file_budget()
+
+    def _maybe_evict(self) -> None:
+        """Revoke idle blocks while over the mount-wide budget.
+
+        Files holding no more than their OWN declared budget are
+        protected in the first pass: a per-file budget is a reservation
+        as well as a cap, so another file's churn cannot evict a
+        budgeted file's warm set while it stays inside its share.  Only
+        if the unprotected files cannot cover the overage (budgets that
+        oversubscribe the mount) does a second pass consider everyone.
+        Victim selection inside a pass honors ``self.eviction``: LRU
+        takes a global strict last-access order; clock sweeps files
+        biggest-resident first (the churner pays first), each file's own
+        hand supplying the second chances.
+        """
+        if self.max_resident_bytes is None or self._resident <= self.max_resident_bytes:
+            return
+        with self._lock:
+            files = list(self._files.values())
+
+        def within_budget(cf: CachedFile) -> bool:
+            return (cf.max_resident_bytes is not None
+                    and cf.resident_bytes <= cf.max_resident_bytes)
+
+        for victims in ([cf for cf in files if not within_budget(cf)], files):
+            if self._resident <= self.max_resident_bytes:
+                return
+            if self.eviction == EVICT_CLOCK:
+                for cf in sorted(victims, key=lambda f: -f.resident_bytes):
+                    over = self._resident - self.max_resident_bytes
+                    if over <= 0:
+                        return
+                    freed = cf.sweep(over)
+                    if freed:
+                        self._resident_delta(-freed)
+            else:
+                candidates = []
+                for cf in victims:
+                    for b in cf.resident_blocks():
+                        candidates.append((cf._last_access[b], cf, int(b)))
+                candidates.sort(key=lambda t: t[0])
+                for _, cf, b in candidates:
+                    if self._resident <= self.max_resident_bytes:
+                        return
+                    freed = cf.try_revoke(b)
+                    if freed:
+                        self._resident_delta(-freed)
+
+    def mount(self, path: Union[str, os.PathLike], *,
+              max_resident_bytes: Optional[int] = None,
+              readahead: Optional[int] = None) -> CachedFile:
+        """Mount (or return the existing cache of) one file.
+
+        ``max_resident_bytes`` sets the file's budget at first mount (and
+        registers it for the mount's lifetime); ``readahead`` overrides
+        the mount default for THIS file — a random-access consumer mounts
+        its file with ``readahead=0`` next to a sequentially-streamed
+        neighbor without splitting the memory budget.
+        """
+        key = os.fspath(path)
+        with self._lock:
+            if max_resident_bytes is not None:
+                self._file_budgets[key] = int(max_resident_bytes)
             cf = self._files.get(key)
             if cf is None:
-                cf = CachedFile(key, block_size=self.block_size, fs=self,
-                                pread_fn=self.pread_fn,
-                                readahead=self.readahead)
+                cf = CachedFile(
+                    key, block_size=self.block_size, fs=self,
+                    pread_fn=self.pread_fn,
+                    readahead=self.readahead if readahead is None else readahead,
+                    eviction=self.eviction,
+                    max_resident_bytes=self._file_budgets.get(key),
+                    retries=self.retries,
+                    retry_backoff_s=self.retry_backoff_s)
                 self._files[key] = cf
-            return cf
+                return cf
+        # already mounted: apply the overrides to the LIVE cache rather
+        # than silently recording a budget that is never enforced
+        if readahead is not None:
+            cf.readahead = int(readahead)
+        if max_resident_bytes is not None:
+            cf.max_resident_bytes = int(max_resident_bytes)
+            cf._enforce_file_budget()
+        return cf
 
     def open(self, path: Union[str, os.PathLike]) -> CachedFileHandle:
         return self.mount(path).open()

@@ -105,6 +105,84 @@ def choose_stream_decode(format: str, b: int = 0,
     raise ValueError(f"unknown graph format {format!r}")
 
 
+@dataclasses.dataclass
+class AccessModePlan:
+    """PG-Fuse configuration matched to an access pattern.
+
+    Feed the fields into :func:`repro.core.paragrapher.open_graph`
+    (``pgfuse_readahead=plan.readahead, pgfuse_eviction=plan.eviction``)
+    and, when ``churn_budget_fraction`` is set, cap the churning byte
+    stream's file with ``fs.set_file_budget(path, int(frac * budget))``.
+    """
+
+    mode: str                 # "sequential" | "random"
+    readahead: int            # PG-Fuse blocks prefetched per miss
+    eviction: str             # pgfuse.EVICT_LRU | pgfuse.EVICT_CLOCK
+    churn_budget_fraction: Optional[float]   # per-file cap for the bulk
+                              # byte stream (None: no cap needed)
+    reason: str
+
+    @property
+    def random(self) -> bool:
+        return self.mode == "random"
+
+
+def choose_access_mode(workload: str, *,
+                       touch_fraction: Optional[float] = None
+                       ) -> AccessModePlan:
+    """Sequential-vs-random PG-Fuse policy from workload hints.
+
+    The streaming loaders scan every byte once in order: always-on
+    readahead turns ~every miss into one enlarged multi-block request,
+    and exact LRU is the right replacement (a block is dead the moment
+    the scan passes it).  Random adjacency queries (sampled minibatch
+    training, online inference serving) invert both assumptions —
+    "Making Caches Work for Graph Analytics" (arXiv:1608.01362) shows
+    random graph access needs a policy that protects the re-referenced
+    hot set rather than raw recency:
+
+    * readahead OFF — the block after a queried adjacency list carries
+      no locality, so prefetching it just churns the cache;
+    * clock/second-chance eviction — hot blocks (offset array, hub
+      vertices) are re-touched every batch and survive sweeps, while a
+      strict recency order would evict them behind any large batch of
+      cold packed-byte reads;
+    * a per-file cap on the bulk/churning stream (packed neighbors rows
+      vs. the offsets region's working set, feature store vs. topology)
+      so churn reclaims from itself first.
+
+    ``workload`` is "stream"/"scan" (sequential) or "sample"/"serve"
+    (random).  ``touch_fraction`` (expected fraction of the file touched
+    per epoch) overrides the keyword when given: a "sampler" that visits
+    ~every vertex each epoch is effectively sequential.
+    """
+    sequential = {"stream", "scan", "sequential", "full"}
+    random_ = {"sample", "serve", "query", "random"}
+    if workload not in sequential | random_:
+        raise ValueError(f"unknown workload {workload!r} "
+                         f"(expected one of {sorted(sequential | random_)})")
+    is_random = workload in random_
+    if touch_fraction is not None:
+        if not 0 <= touch_fraction <= 1:
+            raise ValueError(f"touch_fraction must be in [0,1], "
+                             f"got {touch_fraction}")
+        # visiting most of the file per epoch amortizes like a scan even
+        # if individual requests look random
+        is_random = touch_fraction < 0.5
+    if is_random:
+        return AccessModePlan(
+            mode="random", readahead=0, eviction="clock",
+            churn_budget_fraction=0.5,
+            reason=f"workload {workload!r}: no next-block locality; "
+                   f"second-chance keeps the re-touched hot set; cap the "
+                   f"packed/feature churn at half the budget")
+    return AccessModePlan(
+        mode="sequential", readahead=2, eviction="lru",
+        churn_budget_fraction=None,
+        reason=f"workload {workload!r}: one-pass scan wants enlarged "
+               f"prefetch and exact recency eviction")
+
+
 def choose_stream_parts(n_devices_total: int = 1, process_count: int = 1,
                         min_parts_per_process: int = 8) -> int:
     """Global partition count for a (possibly multi-host) streamed load.

@@ -63,6 +63,9 @@ class StreamedShard:
     n_edges: int
     x: Optional["jax.Array"] = None  # float[v1-v0, d] feature rows, when a
                                      # feature store is streamed alongside
+    y: Optional["jax.Array"] = None  # u8[v1-v0, 2] label family rows
+                                     # ([class id, train-mask flag]), when a
+                                     # label store is streamed alongside
 
     @property
     def n_vertices(self) -> int:
@@ -107,6 +110,9 @@ class StreamStats:
     feature_read_s: float = 0.0    # time in feature-store reads
     feature_cache_hits: int = 0    # the store's own PG-Fuse block cache
     feature_cache_misses: int = 0
+    # label stage (second column family; zero when no label store)
+    label_rows: int = 0            # label/mask rows streamed
+    label_bytes: int = 0           # bytes read from the label store
     wall_s: float = 0.0
 
     # Every derived rate guards against zero/negative durations: a stage
@@ -184,7 +190,8 @@ class GraphStream:
                  granule: Optional[int] = None,
                  decode_plan: Optional[policy.StreamDecodePlan] = None,
                  process_index: int = 0, process_count: int = 1,
-                 feature_path=None, shares=None, align: int = 1):
+                 feature_path=None, label_path=None, shares=None,
+                 align: int = 1):
         # jax-facing imports are deferred to the staging stage so the
         # storage layer stays importable without jax
         from repro.kernels.compbin_decode import STREAM_GRANULE_IDS
@@ -229,6 +236,16 @@ class GraphStream:
                     f"{self._features.n_rows} rows for a graph of "
                     f"{graph.n_vertices} vertices")
             self._feat0 = self._features.pgfuse_stats() or pgfuse.PGFuseStats()
+        # the label/mask column family rides the same mount the same way
+        self._labels = None
+        if label_path is not None:
+            from repro.core import featstore
+            self._labels = featstore.open_featstore(label_path, fs=graph.fs)
+            if self._labels.n_rows != graph.n_vertices:
+                self._labels.close()
+                raise ValueError(
+                    f"label store {label_path} has {self._labels.n_rows} "
+                    f"rows for a graph of {graph.n_vertices} vertices")
         self._n_expected = len(self.plan)
         self._closed = False
         self._drop = threading.Event()   # tells the callback to discard
@@ -345,8 +362,9 @@ class GraphStream:
         # the feature stage runs OUTSIDE the decode timer: its cost is
         # feature_read_s, not decode_s
         x = self._stream_features(v0, v1, off_shard)
+        y = self._stream_labels(v0, v1, off_shard)
         return StreamedShard(v0=v0, v1=v1, offsets=offsets,
-                             neighbors=neighbors, n_edges=n, x=x)
+                             neighbors=neighbors, n_edges=n, x=x, y=y)
 
     def _stream_features(self, v0: int, v1: int, placement):
         """The stream_features stage: feature rows [v0, v1) from the
@@ -371,6 +389,24 @@ class GraphStream:
         x.block_until_ready()
         self.stats.feature_bytes_h2d += rows.nbytes
         return x
+
+    def _stream_labels(self, v0: int, v1: int, placement):
+        """The second column family: label/mask rows [v0, v1) from the
+        attached store — tiny next to features, but streaming them means
+        full-graph batches carry ZERO synthetic tensors."""
+        if self._labels is None:
+            return None
+        import jax
+        import jax.numpy as jnp
+
+        rows = self._labels.read_rows(v0, v1)
+        self.stats.label_rows += rows.shape[0]
+        self.stats.label_bytes += rows.nbytes
+        y = jnp.asarray(rows)
+        if placement is not None:
+            y = jax.device_put(y, placement)
+        y.block_until_ready()
+        return y
 
     # -- the consumer-facing iterator --------------------------------------
     def __iter__(self) -> "GraphStream":
@@ -419,6 +455,8 @@ class GraphStream:
         self._finalize()
         if self._features is not None:
             self._features.close()
+        if self._labels is not None:
+            self._labels.close()
 
     def __enter__(self) -> "GraphStream":
         return self
@@ -433,8 +471,8 @@ def stream_partitions(graph: GraphHandle, mesh=None, *,
                       granule: Optional[int] = None,
                       decode_plan: Optional[policy.StreamDecodePlan] = None,
                       process_index: int = 0, process_count: int = 1,
-                      feature_path=None, shares=None, align: int = 1
-                      ) -> GraphStream:
+                      feature_path=None, label_path=None, shares=None,
+                      align: int = 1) -> GraphStream:
     """Stream an open graph to the device(s) partition by partition.
 
     Parameters mirror the pipeline's three bounds: ``readahead`` partitions
@@ -448,6 +486,10 @@ def stream_partitions(graph: GraphHandle, mesh=None, *,
     read through the graph's PG-Fuse mount and double-buffered to device
     alongside the topology (the ``stream_features`` stage; per-stage
     bytes and cache hit rates land in :class:`StreamStats`).
+    ``label_path`` attaches the label/mask column family the same way
+    (``graph.features.labelstore_for_graph``): shards then carry ``y``
+    ([class id, train-mask] u8 rows) and full-graph batches need no
+    synthetic labels.
 
     Multi-host: every process opens the graph itself (its own PG-Fuse
     cache) and passes its ``process_index`` out of ``process_count``.  All
@@ -464,7 +506,7 @@ def stream_partitions(graph: GraphHandle, mesh=None, *,
                        n_parts=n_parts, n_workers=n_workers, granule=granule,
                        decode_plan=decode_plan, process_index=process_index,
                        process_count=process_count, feature_path=feature_path,
-                       shares=shares, align=align)
+                       label_path=label_path, shares=shares, align=align)
 
 
 def assemble_csr(shards: list[StreamedShard]) -> CSR:

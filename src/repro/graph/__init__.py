@@ -1,5 +1,8 @@
-from repro.graph.features import (featstore_for_graph,  # noqa: F401
+from repro.graph.features import (LABEL_FAMILY_D,  # noqa: F401
+                                  featstore_for_graph, labelstore_for_graph,
                                   synthesize_node_features,
+                                  synthesize_node_labels,
+                                  synthesize_separable_labels,
                                   write_node_features)
 from repro.graph.generators import erdos_renyi, rmat  # noqa: F401
 from repro.graph.partition import (edge_balanced_partition,  # noqa: F401

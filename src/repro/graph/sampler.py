@@ -6,6 +6,15 @@ CSR), so on a pod each host samples its own seed range while the graph
 lives in CompBin on shared storage behind PG-Fuse — the paper's loading
 path *is* the sampler's hot loop.
 
+Preferred adjacency source: a
+:class:`repro.query.NeighborQueryEngine` (anything exposing
+``neighbors_batch``) — each layer's whole frontier is fetched as ONE
+deduplicated, block-coalesced batch instead of one storage round-trip
+per slot, which is where CompBin's byte-addressable random access
+(paper §IV) actually pays.  The sampled output is bit-identical to the
+per-vertex path for the same seed: only the fetch is batched, the RNG
+consumption order is unchanged.
+
 Output is a **padded tree layout** with static shapes (required for jit):
 layer l holds ``n_seeds * prod(fanouts[:l])`` node slots; slot ``i`` of
 layer l+1 region ``[i*f : (i+1)*f]`` holds the sampled neighbors of layer-l
@@ -42,11 +51,13 @@ class SampledBlock:
 
 
 class NeighborSampler:
-    """Uniform fanout sampler over a CSR or an open ParaGrapher handle."""
+    """Uniform fanout sampler over a CSR, an open ParaGrapher handle, or
+    a batched query engine (``neighbors_batch`` duck type)."""
 
     def __init__(self, graph: Union[CSR, GraphHandle], fanouts: Sequence[int],
                  *, seed: int = 0):
         self._g = graph
+        self._batched = hasattr(graph, "neighbors_batch")
         self.fanouts = tuple(int(f) for f in fanouts)
         self._rng = np.random.default_rng(seed)
 
@@ -54,6 +65,24 @@ class NeighborSampler:
         if isinstance(self._g, CSR):
             return self._g.neighbors_of(v)
         return self._g.neighbors_of(v)
+
+    def _layer_adjacency(self, nodes: np.ndarray, valid: np.ndarray) -> dict:
+        """Adjacency for one layer's frontier, keyed by vertex id.
+
+        With a query engine the whole frontier goes out as one
+        deduplicated coalesced batch (vertices shared between slots — the
+        hub-heavy common case — are fetched once); otherwise each unique
+        vertex is read individually.
+        """
+        if self._batched:
+            # the engine dedups internally — handing it the raw frontier
+            # (repeated hubs and all) keeps its dedup-ratio stats honest
+            live = nodes[valid]
+            lists = self._g.neighbors_batch(live)
+            return {int(v): np.asarray(nbrs) for v, nbrs in zip(live, lists)}
+        uniq = np.unique(nodes[valid]) if valid.any() else np.zeros(0, np.int64)
+        lists = [self._neighbors(int(v)) for v in uniq]
+        return {int(v): np.asarray(nbrs) for v, nbrs in zip(uniq, lists)}
 
     @property
     def n_vertices(self) -> int:
@@ -66,12 +95,13 @@ class NeighborSampler:
         for f in self.fanouts:
             prev = layer_nodes[-1]
             prev_valid = layer_valid[-1]
+            adj = self._layer_adjacency(prev, prev_valid)
             nxt = np.full(len(prev) * f, -1, dtype=np.int64)
             val = np.zeros(len(prev) * f, dtype=bool)
             for i, (v, ok) in enumerate(zip(prev, prev_valid)):
                 if not ok:
                     continue
-                nbrs = self._neighbors(int(v))
+                nbrs = adj[int(v)]
                 d = len(nbrs)
                 if d == 0:
                     continue

@@ -2,10 +2,50 @@
 
 from __future__ import annotations
 
+import os
+
 import numpy as np
 
 from repro.core.csr import CSR
 from repro.graph.sampler import SampledBlock
+
+
+def ensure_gnn_assets(workdir: str, d_in: int, n_classes: int, *,
+                      scale: int = 10, edge_factor: int = 8, seed: int = 1,
+                      block_size: int = 1 << 16
+                      ) -> tuple[str, str, str]:
+    """Idempotently materialize the demo GNN storage triplet in
+    ``workdir``: CompBin topology + feature store + label/mask column
+    family (all block-aligned to ``block_size``).  Returns
+    (graph_path, feature_path, label_path) — the same files whether the
+    caller streams them sequentially (--full-graph), samples minibatches
+    through the query engine (--sampled), or serves inference requests.
+    """
+    from repro.core import paragrapher
+    from repro.graph import (featstore_for_graph, labelstore_for_graph, rmat,
+                             synthesize_node_features,
+                             synthesize_separable_labels)
+
+    os.makedirs(workdir, exist_ok=True)
+    gp = os.path.join(workdir, f"graph_s{scale}e{edge_factor}.cbin")
+    if not os.path.exists(gp):
+        paragrapher.save_graph(gp, rmat(scale, edge_factor, seed=seed),
+                               format="compbin")
+    fp = os.path.join(workdir, f"graph_s{scale}e{edge_factor}_d{d_in}.fst")
+    if not os.path.exists(fp):
+        featstore_for_graph(gp, fp, d_in, seed=0, data_align=block_size)
+    lp = os.path.join(workdir,
+                      f"graph_s{scale}e{edge_factor}_d{d_in}c{n_classes}.lbl")
+    if not os.path.exists(lp):
+        # labels derived from the stored features (fixed projection), so
+        # training on the triplet has signal to fit — loss decreases
+        with paragrapher.open_graph(gp) as g:
+            n = g.n_vertices
+        x = synthesize_node_features(n, d_in, seed=0)
+        labelstore_for_graph(gp, lp, n_classes, seed=0,
+                             labels=synthesize_separable_labels(x, n_classes),
+                             data_align=block_size)
+    return gp, fp, lp
 
 
 def block_to_edges(block: SampledBlock) -> tuple[np.ndarray, np.ndarray, int]:
@@ -74,6 +114,47 @@ def block_to_batch(arch_id: str, cfg, block: SampledBlock, rng) -> dict:
     return batch
 
 
+def sampled_store_batch(arch_id: str, cfg, block: SampledBlock, feats,
+                        labels=None) -> dict:
+    """Minibatch dict from a sampled block with REAL per-node tensors:
+    feature rows gathered from the feature store and (when a label store
+    is given) seed labels/masks from the label column family — the
+    sampled-training sibling of :func:`streamed_graph_batch`, zero
+    synthetic tensors on the gcn/pna path.
+
+    ``feats``/``labels`` are :class:`repro.core.featstore.FeatureStoreHandle`
+    objects, typically mounted on the SAME PG-Fuse instance as the graph
+    the block was sampled from (one memory budget for topology + features
+    + labels).  Row gathers go through
+    :func:`repro.query.engine.gather_rows` (dedup + run-coalesced reads).
+    """
+    import jax.numpy as jnp
+
+    from repro.query.engine import gather_rows
+
+    src, dst, n = block_to_edges(block)
+    nodes = np.concatenate(block.layer_nodes)
+    valid = np.concatenate(block.layer_valid)
+    x = gather_rows(feats, np.where(valid, nodes, -1))
+    batch = {
+        "x": jnp.asarray(np.ascontiguousarray(x, dtype=np.float32)),
+        "edge_src": jnp.asarray(src.astype(np.int32)),
+        "edge_dst": jnp.asarray(dst.astype(np.int32)),
+    }
+    if arch_id in ("gcn-cora", "pna"):
+        n_seeds = len(block.seeds)
+        lab = np.full(n, -1, np.int64)
+        mask = np.zeros(n, bool)
+        if labels is not None:
+            fam = gather_rows(labels, block.seeds)
+            lab[:n_seeds] = fam[:, 0].astype(np.int64)
+            # only seeds the store marks as training rows contribute loss
+            mask[:n_seeds] = fam[:, 1].astype(bool)
+        batch["labels"] = jnp.asarray(lab)
+        batch["label_mask"] = jnp.asarray(mask)
+    return batch
+
+
 def shards_to_edge_index(shards) -> tuple:
     """Streamed device shards -> (edge_src, edge_dst) ON DEVICE.
 
@@ -119,6 +200,26 @@ def shards_to_features(shards) -> "jax.Array | None":
     return jnp.concatenate([s.x for s in shards])
 
 
+def shards_to_labels(shards) -> "tuple | None":
+    """Streamed label-family rows -> (labels int32[n], mask bool[n]) on
+    device, or None when no label store was attached.  Mixed
+    labeled/unlabeled shards are an error for the same reason mixed
+    feature shards are (see :func:`shards_to_features`)."""
+    import jax.numpy as jnp
+
+    shards = sorted(shards, key=lambda s: s.v0)
+    have = [s.y is not None for s in shards]
+    if not any(have):
+        return None
+    if not all(have):
+        missing = [(s.v0, s.v1) for s, h in zip(shards, have) if not h]
+        raise ValueError(
+            f"shards {missing} carry no label rows but others do; every "
+            f"host must stream the same label store")
+    y = jnp.concatenate([s.y for s in shards])
+    return y[:, 0].astype(jnp.int32), y[:, 1].astype(bool)
+
+
 def streamed_graph_batch(arch_id: str, cfg, shards, rng, *,
                          n_classes: int = 7,
                          n_vertices: int | None = None) -> dict:
@@ -136,7 +237,9 @@ def streamed_graph_batch(arch_id: str, cfg, shards, rng, *,
     When the stream carried a feature store (``feature_path=``), ``x``
     is the shards' real feature rows — storage -> PG-Fuse -> device with
     zero host synthesis; the hashed-random stand-in is used only for
-    feature-less streams.
+    feature-less streams.  When it also carried the label/mask column
+    family (``label_path=``), ``labels``/``label_mask`` come off storage
+    too and the batch holds ZERO synthetic tensors.
     """
     import jax.numpy as jnp
 
@@ -170,8 +273,16 @@ def streamed_graph_batch(arch_id: str, cfg, shards, rng, *,
         "edge_dst": dst,
     }
     if arch_id in ("gcn-cora", "pna"):
-        batch["labels"] = jnp.asarray(rng.integers(0, n_classes, n))
-        batch["label_mask"] = jnp.asarray(rng.random(n) < 0.3)
+        lab = shards_to_labels(shards)
+        if lab is not None:
+            if int(jnp.max(lab[0])) >= n_classes:
+                raise ValueError(
+                    f"label store holds class {int(jnp.max(lab[0]))} but "
+                    f"the model expects n_classes={n_classes}")
+            batch["labels"], batch["label_mask"] = lab
+        else:
+            batch["labels"] = jnp.asarray(rng.integers(0, n_classes, n))
+            batch["label_mask"] = jnp.asarray(rng.random(n) < 0.3)
     return batch
 
 

@@ -71,40 +71,91 @@ def _gnn_batches(arch_id: str, cfg, tmpdir: str, use_pgfuse: bool):
     return gen()
 
 
+def _gnn_sampled_batches(arch_id: str, cfg, tmpdir: str, use_pgfuse: bool,
+                         batch_seeds: int = 64, fanouts=(5, 5)):
+    """``--sampled``: minibatch training through the random-access query
+    engine.  Adjacency comes from :class:`repro.query.NeighborQueryEngine`
+    (deduplicated, block-coalesced CompBin reads), features and seed
+    labels from the two column-family stores on the SAME PG-Fuse mount —
+    all three byte streams share one memory budget under the
+    random-access policy (:func:`repro.core.policy.choose_access_mode`:
+    readahead off, clock eviction, churn capped), and nothing in the
+    batch is synthesized on the host.
+    """
+    from repro.core import featstore, paragrapher, policy
+    from repro.graph import NeighborSampler
+    from repro.launch.data_gnn import ensure_gnn_assets, sampled_store_batch
+    from repro.query import NeighborQueryEngine
+
+    d_in = getattr(cfg, "d_in", getattr(cfg, "d_node_in", 16))
+    n_classes = getattr(cfg, "n_classes", 7)
+    block_size = 1 << 16
+    gp, fp, lp = ensure_gnn_assets(tmpdir, d_in, n_classes,
+                                   block_size=block_size)
+    amode = policy.choose_access_mode("sample")
+    budget = 256 * block_size
+    g = paragrapher.open_graph(
+        gp, use_pgfuse=use_pgfuse, pgfuse_block_size=block_size,
+        pgfuse_readahead=amode.readahead, pgfuse_eviction=amode.eviction,
+        pgfuse_max_resident_bytes=budget if use_pgfuse else None)
+    churn_cap = (int(amode.churn_budget_fraction * budget)
+                 if amode.churn_budget_fraction else None)
+    feats = featstore.open_featstore(fp, fs=g.fs,
+                                     pgfuse_file_budget=churn_cap,
+                                     pgfuse_file_readahead=0)
+    labels = featstore.open_featstore(lp, fs=g.fs, pgfuse_file_readahead=0)
+    engine = NeighborQueryEngine(g)
+    sampler = NeighborSampler(engine, fanouts=fanouts, seed=0)
+    rng = np.random.default_rng(0)
+    n = g.n_vertices
+    log.info("sampled mode: %s over %s (|V|=%d); %s", arch_id, gp, n,
+             amode.reason)
+
+    def gen():
+        step = 0
+        while True:
+            block = sampler.sample(rng.integers(0, n, batch_seeds))
+            yield sampled_store_batch(arch_id, cfg, block, feats, labels)
+            step += 1
+            if step % 50 == 0:
+                st = engine.stats
+                log.info("query engine after %d batches: dedup %.2fx, "
+                         "%d blocks touched, p50 %.2f ms",
+                         st.batches, st.dedup_ratio, st.blocks_touched,
+                         st.p50_s * 1e3)
+
+    return gen()
+
+
 def _gnn_full_graph_batches(arch_id: str, cfg, tmpdir: str, use_pgfuse: bool,
                             hosts: int):
     """Full-graph mode: storage -> PG-Fuse -> packed CompBin + FeatStore
     rows -> device decode -> :func:`streamed_graph_batch`, on ``hosts``
     simulated processes.  The whole graph becomes ONE device-resident
     batch; every step is a full-batch epoch (the classic Cora/ogbn
-    regime).  Neither the neighbor IDs nor the feature rows are ever
-    synthesized or decoded on the host: ``x`` comes off storage through
-    the same PG-Fuse mount as the topology.
+    regime).  Neighbor IDs, feature rows, AND the label/mask column
+    family all come off storage through the same PG-Fuse mount — the
+    batch carries zero synthetic tensors.
     """
     from repro.core import paragrapher, policy
     from repro.data.multihost import (aggregate_stats, all_shards,
                                       simulate_hosts)
-    from repro.graph import featstore_for_graph, rmat
-    from repro.launch.data_gnn import streamed_graph_batch
+    from repro.launch.data_gnn import ensure_gnn_assets, streamed_graph_batch
 
     block_size = 1 << 16
     d_in = getattr(cfg, "d_in", getattr(cfg, "d_node_in", 16))
-    path = os.path.join(tmpdir, "graph_full.cbin")
-    if not os.path.exists(path):
-        paragrapher.save_graph(path, rmat(10, 8, seed=1), format="compbin")
-    feat_path = os.path.join(tmpdir, f"graph_full_d{d_in}.fst")
-    if not os.path.exists(feat_path):
-        # the converter: real deployments convert their raw feature dump
-        # once; benchmark graphs get the deterministic synthesized matrix
-        featstore_for_graph(path, feat_path, d_in, seed=0,
-                            data_align=block_size)
+    # the converters: real deployments convert their raw feature/label
+    # dumps once; benchmark graphs get the deterministic synthesized ones
+    path, feat_path, label_path = ensure_gnn_assets(
+        tmpdir, d_in, getattr(cfg, "n_classes", 7), block_size=block_size)
     open_kwargs = dict(use_pgfuse=use_pgfuse, pgfuse_block_size=block_size,
                        pgfuse_readahead=2)
     with paragrapher.open_graph(path) as g:
         align = policy.choose_feature_align(block_size, d_in * 4,
                                             g.n_vertices, hosts)
     results = simulate_hosts(path, hosts, open_kwargs=open_kwargs,
-                             feature_path=feat_path, align=align)
+                             feature_path=feat_path, label_path=label_path,
+                             align=align)
     for r in results:
         st = r.stats
         log.info("host %d/%d: vertices [%d,%d) %d partitions %d edges "
@@ -217,6 +268,11 @@ def main() -> None:
                     help="GNN archs: train full-batch on the streamed "
                          "partition->device pipeline instead of sampled "
                          "minibatches")
+    ap.add_argument("--sampled", action="store_true",
+                    help="GNN archs: sampled minibatches drawn through "
+                         "the random-access query engine (repro.query), "
+                         "features+labels gathered from the column-family "
+                         "stores on the shared PG-Fuse mount")
     ap.add_argument("--hosts", type=int, default=1,
                     help="simulated processes for --full-graph streaming "
                          "(data/multihost.py)")
@@ -235,9 +291,14 @@ def main() -> None:
         batches = _lm_batches(cfg, args.batch, args.seq, args.workdir,
                               args.use_pgfuse)
     elif spec.family == "gnn":
+        if args.full_graph and args.sampled:
+            ap.error("--full-graph and --sampled are mutually exclusive")
         if args.full_graph:
             batches = _gnn_full_graph_batches(args.arch, cfg, args.workdir,
                                               args.use_pgfuse, args.hosts)
+        elif args.sampled:
+            batches = _gnn_sampled_batches(args.arch, cfg, args.workdir,
+                                           args.use_pgfuse)
         else:
             batches = _gnn_batches(args.arch, cfg, args.workdir,
                                    args.use_pgfuse)

@@ -1,0 +1,2 @@
+from repro.query.engine import (NeighborQueryEngine,  # noqa: F401
+                                QueryFuture, QueryStats, gather_rows)

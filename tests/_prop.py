@@ -81,6 +81,19 @@ class Draw:
             s[self.int(0, k - 1)] *= 10.0
         return s / s.sum()
 
+    def vertex_batch(self, n_vertices: int, max_size: int = 256) -> np.ndarray:
+        """A query batch over [0, n_vertices): biased toward DUPLICATES
+        (zipf-ish hot vertices repeated in one batch — the case the query
+        engine's dedup exists for) and occasionally empty."""
+        if n_vertices == 0 or self.rng.random() < 0.05:
+            return np.zeros(0, dtype=np.int64)
+        size = self.int(1, max_size)
+        ids = self.ints(0, n_vertices - 1, size).astype(np.int64)
+        if self.bool():  # fold a hot subset over itself
+            k = self.int(1, max(1, size // 4))
+            ids[self.ints(0, size - 1, k)] = ids[self.int(0, size - 1)]
+        return ids
+
     def plan(self, csr, max_parts: int = 9) -> list:
         """An edge-balanced partition plan over ``csr`` (the same cut rule
         GraphHandle.partition_plan uses), possibly with more requested

@@ -126,6 +126,78 @@ def test_stream_recovers_after_transient_error(graph_file, faulty_storage):
             assert assemble_csr(list(stream)) == csr
 
 
+def test_retry_policy_absorbs_transient_eio(data_file, faulty_storage):
+    """With retries=N a transient EIO never reaches the consumer: the
+    bounded-retry wrapper goes back to storage (deterministic backoff)
+    and the SAME pread succeeds.  The retry sits above the underlying-
+    read funnel, so the injected fault exercises the real policy."""
+    path, payload = data_file
+    cf = pgfuse.CachedFile(path, block_size=BLOCK, retries=2,
+                           retry_backoff_s=1e-4)
+    try:
+        faulty_storage.fail_at[1] = OSError(errno.EIO, "flaky OST")
+        faulty_storage.install(cf)
+        assert cf.pread(0, len(payload)) == payload  # no exception escapes
+        assert cf.stats.retried_reads == 1
+        assert faulty_storage.n_calls >= 2  # the retry really hit storage
+    finally:
+        cf.close()
+
+
+def test_retry_policy_is_bounded(data_file, faulty_storage):
+    """More consecutive EIOs than retries= allows must surface — a dead
+    OST is not a transient fault, and unbounded retry would hang the
+    loader instead of failing it over."""
+    path, payload = data_file
+    cf = pgfuse.CachedFile(path, block_size=BLOCK, retries=1,
+                           retry_backoff_s=1e-4)
+    try:
+        for i in (1, 2):  # first attempt AND its one retry both fail
+            faulty_storage.fail_at[i] = OSError(errno.EIO, "dead OST")
+        faulty_storage.install(cf)
+        with pytest.raises(OSError) as exc:
+            cf.pread(0, len(payload))
+        assert exc.value.errno == errno.EIO
+        assert cf.stats.retried_reads == 1  # exactly one retry was spent
+        # claims reverted through the state machine: a later read works
+        assert cf.pread(0, len(payload)) == payload
+    finally:
+        cf.close()
+
+
+def test_retry_policy_through_graph_stream(graph_file, faulty_storage):
+    """End to end: a streamed load over a retrying mount survives an
+    injected transient EIO that would otherwise kill the stream."""
+    path, csr = graph_file
+    with paragrapher.open_graph(path, use_pgfuse=True,
+                                pgfuse_block_size=BLOCK,
+                                pgfuse_retries=2,
+                                pgfuse_retry_backoff_s=1e-4) as g:
+        faulty_storage.fail_at[1] = OSError(errno.EIO, "flaky OST")
+        faulty_storage.install_graph(g)
+        with stream_partitions(g, None, n_parts=4) as stream:
+            assert assemble_csr(list(stream)) == csr
+        assert g.pgfuse_stats().retried_reads == 1
+
+
+def test_retry_does_not_mask_short_reads(data_file, faulty_storage):
+    """Short reads are NOT retried by the policy (they surface through
+    the strict short-read path): retrying would re-read a block the
+    filesystem claims is shorter than the header says, hiding
+    truncation behind latency."""
+    path, payload = data_file
+    cf = pgfuse.CachedFile(path, block_size=BLOCK, retries=3,
+                           retry_backoff_s=1e-4)
+    try:
+        faulty_storage.truncate_at[1] = 100
+        faulty_storage.install(cf)
+        with pytest.raises(IOError, match="short read"):
+            cf.pread(0, len(payload))
+        assert cf.stats.retried_reads == 0
+    finally:
+        cf.close()
+
+
 def test_readahead_runs_through_injected_latency(graph_file):
     """Under a per-request latency floor the readahead path must stay
     active (enlarged multi-block fetches) and cut underlying requests."""

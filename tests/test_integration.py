@@ -47,6 +47,26 @@ def test_train_with_grad_compression(tmp_path):
     assert r.returncode == 0, r.stderr[-2000:]
 
 
+def test_train_sampled_through_query_engine(tmp_path):
+    """--sampled: minibatch GCN drawn through the random-access query
+    engine + column-family stores, in a fresh interpreter."""
+    r = _run(["-m", "repro.launch.train", "--arch", "gcn-cora", "--reduced",
+              "--steps", "20", "--sampled", "--workdir", str(tmp_path)])
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "sampled mode" in r.stderr
+    assert "done:" in r.stderr
+
+
+def test_serve_gnn_requests(tmp_path):
+    """GNN serving: query -> gather features -> GCN forward, with
+    latency + query-engine stats reported."""
+    r = _run(["-m", "repro.launch.serve", "--arch", "gcn-cora", "--reduced",
+              "--batch", "8", "--requests", "6",
+              "--workdir", str(tmp_path)])
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "query dedup" in r.stderr
+
+
 def test_serve_lm_decode(tmp_path):
     r = _run(["-m", "repro.launch.serve", "--arch", "smollm-360m", "--reduced",
               "--batch", "2", "--prompt-len", "16", "--tokens", "8"])
