@@ -1,0 +1,66 @@
+"""Coverage ratchet: fail CI when tier-1 line coverage drops below the
+committed floor.
+
+    python .github/scripts/coverage_ratchet.py coverage.xml .github/coverage_floor
+
+The floor file holds one fraction in [0, 1] (lines starting with '#' are
+comments).  The gate fails when the fresh ``coverage.xml`` line rate is
+more than ``--tolerance`` (default 0.01, i.e. one percentage point)
+BELOW the floor — so refactors can wiggle, but a PR cannot quietly land
+untested code.  Rises never fail; when the measured rate exceeds the
+floor by more than the tolerance the script prints the value to commit,
+and a PR that raises coverage should ratchet the floor up to it.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import xml.etree.ElementTree as ET
+
+
+def read_floor(path: str) -> float:
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line and not line.startswith("#"):
+                floor = float(line)
+                if not 0.0 <= floor <= 1.0:
+                    raise SystemExit(f"floor {floor} outside [0, 1]")
+                return floor
+    raise SystemExit(f"{path}: no floor value found")
+
+
+def read_line_rate(path: str) -> float:
+    root = ET.parse(path).getroot()
+    rate = root.get("line-rate")
+    if rate is None:
+        raise SystemExit(f"{path}: no line-rate attribute on <coverage>")
+    return float(rate)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("coverage_xml")
+    ap.add_argument("floor_file")
+    ap.add_argument("--tolerance", type=float, default=0.01,
+                    help="allowed drop below the floor (fraction of lines)")
+    args = ap.parse_args()
+
+    rate = read_line_rate(args.coverage_xml)
+    floor = read_floor(args.floor_file)
+    print(f"coverage line rate {rate:.4f} vs committed floor {floor:.4f} "
+          f"(tolerance {args.tolerance:.2%})")
+    if rate < floor - args.tolerance:
+        print(f"FAIL: coverage dropped {floor - rate:.2%} below the floor; "
+              f"add tests or (deliberately) lower {args.floor_file}")
+        return 1
+    if rate > floor + args.tolerance:
+        print(f"note: coverage is {rate - floor:.2%} above the floor — "
+              f"ratchet it up: echo {rate:.4f} > {args.floor_file}")
+    print("OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -81,7 +81,8 @@ def _suite_loading(args) -> None:
 
 
 def _suite_query(args) -> None:
-    """Random-access query engine vs sequential policy on a zipf trace ->
+    """Random-access query engine vs sequential policy on a zipf trace
+    (+ host-vs-device decode arms on a large-fanout trace) ->
     BENCH_query.json (virtual-clock p50/p99 latency + hit rate, gated
     downward/upward respectively by the bench lane)."""
     from benchmarks import query

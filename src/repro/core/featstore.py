@@ -256,7 +256,8 @@ class FeatureStoreHandle:
                  pgfuse_readahead: int = 0,
                  pgfuse_pread_fn=None,
                  pgfuse_file_budget: Optional[int] = None,
-                 pgfuse_file_readahead: Optional[int] = None):
+                 pgfuse_file_readahead: Optional[int] = None,
+                 pgfuse_engine=None):
         self.path = os.fspath(path)
         self._owns_fs = False
         self._fs = fs
@@ -271,18 +272,35 @@ class FeatureStoreHandle:
         if self._fs is not None:
             # ``pgfuse_file_budget`` caps THIS store's share of the shared
             # mount (so feature churn cannot evict the graph's hot offset
-            # blocks) and ``pgfuse_file_readahead`` overrides the mount's
-            # readahead for this file only (0 for random row gathers)
+            # blocks), ``pgfuse_file_readahead`` overrides the mount's
+            # readahead for this file only (0 for random row gathers),
+            # and ``pgfuse_engine`` claims the store for one tenant's
+            # EngineShare on a multi-model mount
             self._cf = self._fs.mount(
                 self.path, max_resident_bytes=pgfuse_file_budget,
-                readahead=pgfuse_file_readahead)
+                readahead=pgfuse_file_readahead, engine=pgfuse_engine)
+            if not self._owns_fs:
+                # shared mount: refcounted like GraphHandle, so two
+                # handles over the SAME store (model replicas) can close
+                # independently without dropping each other's cache
+                self._fs.retain(self.path)
         self._closed = False
-        rdr = self._reader()  # validates the header eagerly
-        self.header = rdr.header
-        self.n_rows = rdr.n_rows
-        self.d = rdr.d
-        self.dtype = rdr.dtype
-        rdr.close()
+        try:
+            rdr = self._reader()  # validates the header eagerly
+            self.header = rdr.header
+            self.n_rows = rdr.n_rows
+            self.d = rdr.d
+            self.dtype = rdr.dtype
+            rdr.close()
+        except BaseException:
+            # unwind the mount on a failed open (mirrors GraphHandle):
+            # otherwise the retain/share membership leaks handle-less
+            if self._fs is not None:
+                if self._owns_fs:
+                    self._fs.unmount()
+                else:
+                    self._fs.unmount(self.path)
+            raise
 
     @property
     def cached_file(self) -> Optional[pgfuse.CachedFile]:
@@ -313,9 +331,14 @@ class FeatureStoreHandle:
         if self._closed:
             return
         self._closed = True
-        if self._owns_fs and self._fs is not None:
-            self._fs.unmount()
-        # a shared fs (fs=graph.fs) is owned by the graph's lifecycle
+        if self._fs is not None:
+            if self._owns_fs:
+                self._fs.unmount()
+            else:
+                # release OUR retain of this store's file; the shared fs
+                # itself is owned by whoever created it, and the file
+                # truly unmounts only when its last retainer closes
+                self._fs.unmount(self.path)
 
     def __enter__(self) -> "FeatureStoreHandle":
         return self

@@ -67,32 +67,61 @@ class GraphHandle:
                  use_pgfuse: bool = False,
                  pgfuse_block_size: int = pgfuse.DEFAULT_BLOCK_SIZE,
                  pgfuse_max_resident_bytes: Optional[int] = None,
-                 pgfuse_readahead: int = 0,
+                 pgfuse_readahead: Optional[int] = None,
                  pgfuse_pread_fn=None,
                  pgfuse_eviction: str = pgfuse.EVICT_LRU,
                  pgfuse_retries: int = 0,
-                 pgfuse_retry_backoff_s: float = 0.005):
+                 pgfuse_retry_backoff_s: float = 0.005,
+                 pgfuse_fs: Optional[pgfuse.PGFuseFS] = None,
+                 pgfuse_engine=None):
         self.path = os.fspath(path)
         self.format = detect_format(path) if format == "auto" else format
         self._fs: Optional[pgfuse.PGFuseFS] = None
-        if use_pgfuse:
+        self._owns_fs = False
+        if pgfuse_fs is not None:
+            # multi-tenant: join an existing mount (several serving
+            # models under one budget); this graph's file takes the
+            # caller's readahead ONLY when explicitly given (None
+            # inherits the mount default and never clobbers a live
+            # file's setting), and closing the handle unmounts only
+            # this file, never the other tenants'
+            self._fs = pgfuse_fs
+            self._fs.mount(self.path, readahead=pgfuse_readahead,
+                           engine=pgfuse_engine)
+            # refcounted: another handle over the SAME file (two tenants,
+            # one topology) keeps the cache warm past our close()
+            self._fs.retain(self.path)
+        elif use_pgfuse:
             self._fs = pgfuse.PGFuseFS(
                 block_size=pgfuse_block_size,
                 max_resident_bytes=pgfuse_max_resident_bytes,
-                readahead=pgfuse_readahead,
+                readahead=pgfuse_readahead or 0,
                 pread_fn=pgfuse_pread_fn,
                 eviction=pgfuse_eviction,
                 retries=pgfuse_retries,
                 retry_backoff_s=pgfuse_retry_backoff_s,
             )
-            self._fs.mount(self.path)
+            self._owns_fs = True
+            self._fs.mount(self.path, engine=pgfuse_engine)
         self._closed = False
-        rdr = self._reader()  # validates header eagerly
-        self.n_vertices = rdr.n_vertices
-        self.n_edges = rdr.n_edges
-        # CompBin bytes/ID (paper §IV); 0 for formats without fixed-width IDs
-        self.bytes_per_id = rdr.b if isinstance(rdr, compbin.CompBinFile) else 0
-        rdr.close()
+        try:
+            rdr = self._reader()  # validates header eagerly
+            self.n_vertices = rdr.n_vertices
+            self.n_edges = rdr.n_edges
+            # CompBin bytes/ID (§IV); 0 for formats without fixed-width IDs
+            self.bytes_per_id = rdr.b if isinstance(rdr, compbin.CompBinFile) \
+                else 0
+            rdr.close()
+        except BaseException:
+            # a failed open must not strand the mount: unwind the retain
+            # (shared fs) / the whole private fs, or the refcount and any
+            # share membership leak with no handle left to release them
+            if self._fs is not None:
+                if self._owns_fs:
+                    self._fs.unmount()
+                else:
+                    self._fs.unmount(self.path)
+            raise
 
     # -- internals ----------------------------------------------------------
     def _open_file(self):
@@ -225,7 +254,12 @@ class GraphHandle:
             return
         self._closed = True
         if self._fs is not None:
-            self._fs.unmount()  # releases every cached block (paper §III)
+            if self._owns_fs:
+                self._fs.unmount()  # releases every cached block (§III)
+            else:
+                # shared mount: release only OUR file; other tenants'
+                # caches stay warm
+                self._fs.unmount(self.path)
 
     def __enter__(self) -> "GraphHandle":
         return self
@@ -321,11 +355,13 @@ def open_graph(path: Union[str, os.PathLike], *, format: str = "auto",
                use_pgfuse: bool = False,
                pgfuse_block_size: int = pgfuse.DEFAULT_BLOCK_SIZE,
                pgfuse_max_resident_bytes: Optional[int] = None,
-               pgfuse_readahead: int = 0,
+               pgfuse_readahead: Optional[int] = None,
                pgfuse_pread_fn=None,
                pgfuse_eviction: str = pgfuse.EVICT_LRU,
                pgfuse_retries: int = 0,
-               pgfuse_retry_backoff_s: float = 0.005) -> GraphHandle:
+               pgfuse_retry_backoff_s: float = 0.005,
+               pgfuse_fs: Optional[pgfuse.PGFuseFS] = None,
+               pgfuse_engine=None) -> GraphHandle:
     """Open a graph for loading (the ParaGrapher entry point).
 
     ``use_pgfuse=True`` mounts the file in the PG-Fuse block cache
@@ -338,6 +374,12 @@ def open_graph(path: Union[str, os.PathLike], *, format: str = "auto",
     :func:`repro.core.policy.choose_access_mode`) and ``pgfuse_retries``
     bounds transient-EIO retries per underlying read (deterministic
     ``pgfuse_retry_backoff_s * attempt`` backoff).
+
+    Multi-tenant serving passes ``pgfuse_fs=`` (an existing
+    :class:`repro.core.pgfuse.PGFuseFS` several models share — closing
+    the handle then unmounts only this graph's file) and optionally
+    ``pgfuse_engine=`` (an :class:`repro.core.pgfuse.EngineShare` or its
+    name) to claim the file for that tenant's cache share.
     """
     return GraphHandle(
         path, format=format, use_pgfuse=use_pgfuse,
@@ -348,6 +390,8 @@ def open_graph(path: Union[str, os.PathLike], *, format: str = "auto",
         pgfuse_eviction=pgfuse_eviction,
         pgfuse_retries=pgfuse_retries,
         pgfuse_retry_backoff_s=pgfuse_retry_backoff_s,
+        pgfuse_fs=pgfuse_fs,
+        pgfuse_engine=pgfuse_engine,
     )
 
 

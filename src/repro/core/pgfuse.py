@@ -41,6 +41,16 @@ survives the batch churn.  ``CachedFile(max_resident_bytes=...)`` adds a
 per-file cap on top of the mount-wide budget, bounding how much of the
 shared budget one file's churn may claim (e.g. cap the packed-neighbor /
 feature-store traffic so the hot offset blocks are never the victims).
+
+Multi-tenant shares: several serving models on ONE mount group their
+files into :class:`EngineShare` slices
+(``fs.register_engine("model-a", budget)``; files join via
+``share.mount`` / ``fs.mount(path, engine=...)``).  A share is both a
+cap and a reservation layered over the per-file budgets: a share over
+its budget reclaims from its OWN files first (biggest resident first,
+each file's clock hand supplying second chances), and the mount-wide
+sweep protects every share still inside its budget — so one tenant's
+churn can never evict another tenant's warm set, only its own.
 """
 
 from __future__ import annotations
@@ -144,7 +154,8 @@ class CachedFile:
                  eviction: str = EVICT_LRU,
                  max_resident_bytes: Optional[int] = None,
                  retries: int = 0,
-                 retry_backoff_s: float = 0.005):
+                 retry_backoff_s: float = 0.005,
+                 clock=None):
         self.path = os.fspath(path)
         self.block_size = int(block_size)
         self.readahead = int(readahead)
@@ -164,6 +175,12 @@ class CachedFile:
         self.max_resident_bytes = max_resident_bytes
         self.retries = int(retries)
         self.retry_backoff_s = float(retry_backoff_s)
+        # last-access timestamps come from an injectable clock so eviction
+        # order (and the multi-tenant soak tests that pin it) can be a
+        # deterministic property of the access sequence, not of wall time
+        self._clock = clock or time.monotonic
+        # multi-tenant slice this file belongs to (PGFuseFS.register_engine)
+        self.share: Optional["EngineShare"] = None
         self._fd = os.open(self.path, os.O_RDONLY)
         self.size = os.fstat(self._fd).st_size
         # injectable storage backend (benchmarks emulate Lustre/HDD
@@ -295,7 +312,7 @@ class CachedFile:
                     raise IOError(
                         f"{self.path}: short read of block {b}: got "
                         f"{len(run)} of {expected_b} bytes")
-                now = time.monotonic()
+                now = self._clock()
                 installed_ahead = 0
                 for j, c in enumerate(claimed):
                     expected = min(self.block_size, self.size - c * self.block_size)
@@ -328,6 +345,7 @@ class CachedFile:
                 with self._cond:
                     self._cond.notify_all()
                 self._enforce_file_budget()
+                self._enforce_share_budget()
                 return self._blocks[b]
             # s is LOADING or REVOKING: wait for the owning thread
             waited = True
@@ -337,7 +355,7 @@ class CachedFile:
                     self._cond.wait(timeout=0.05)
 
     def release_block(self, b: int) -> None:
-        self._last_access[b] = time.monotonic()
+        self._last_access[b] = self._clock()
         if self._statuses.release_reader(b) == 0:
             with self._cond:
                 self._cond.notify_all()  # close() may be draining readers
@@ -396,7 +414,7 @@ class CachedFile:
                 with self._cond:
                     self._cond.notify_all()
                 raise
-            now = time.monotonic()
+            now = self._clock()
             installed = 0
             for j, c in enumerate(claimed):
                 expected = min(self.block_size, self.size - c * self.block_size)
@@ -423,6 +441,7 @@ class CachedFile:
             loaded += installed
             b = nxt
         self._enforce_file_budget()
+        self._enforce_share_budget()
         if self._fs is not None:
             self._fs._maybe_evict()
         return loaded
@@ -504,6 +523,11 @@ class CachedFile:
         freed = self.sweep(over)
         if freed and self._fs is not None:
             self._fs._resident_delta(-freed)
+
+    def _enforce_share_budget(self) -> None:
+        """Keep this file's ENGINE share inside its cap (when in one)."""
+        if self.share is not None:
+            self.share.enforce()
 
     def resident_blocks(self) -> np.ndarray:
         with self._resident_lock:
@@ -620,6 +644,89 @@ class CachedFileHandle:
         pass
 
 
+class EngineShare:
+    """One serving engine's slice of a shared mount (multi-tenant budgets).
+
+    A share groups the files one tenant (one serving model: its CompBin
+    topology + feature/label column families) reads, and layers a budget
+    over them ABOVE the per-file caps: the share's resident total is the
+    sum of its member files', and when it exceeds ``max_resident_bytes``
+    the share reclaims from its own members — biggest resident first,
+    each member's own clock hand supplying the second chances — before
+    the mount-wide sweep would ever look at another tenant.  Conversely
+    :meth:`PGFuseFS._maybe_evict` protects every share still inside its
+    budget, so the share is a reservation too: tenant A's churn cannot
+    evict tenant B's warm set while B stays inside its slice.
+
+    A file belongs to at most ONE share; genuinely shared files (two
+    engines over one topology) stay unassigned and compete in the common
+    pool.
+    """
+
+    def __init__(self, fs: "PGFuseFS", name: str,
+                 max_resident_bytes: Optional[int]):
+        self._fs = fs
+        self.name = name
+        self.max_resident_bytes = (None if max_resident_bytes is None
+                                   else int(max_resident_bytes))
+        self._files: Dict[str, CachedFile] = {}
+        self._lock = threading.Lock()
+
+    @property
+    def resident_bytes(self) -> int:
+        with self._lock:
+            return sum(cf.resident_bytes for cf in self._files.values())
+
+    def files(self) -> list:
+        with self._lock:
+            return list(self._files.values())
+
+    def add_file(self, cf: CachedFile) -> None:
+        if cf.share is not None and cf.share is not self:
+            raise ValueError(
+                f"{cf.path} already belongs to engine share "
+                f"{cf.share.name!r}; a file joins at most one share "
+                f"(shared files stay unassigned)")
+        with self._lock:
+            self._files[cf.path] = cf
+        cf.share = self
+
+    def mount(self, path: Union[str, os.PathLike], **mount_kwargs
+              ) -> CachedFile:
+        """Mount ``path`` on the underlying fs and claim it for this
+        share (kwargs as :meth:`PGFuseFS.mount`)."""
+        cf = self._fs.mount(path, **mount_kwargs)
+        self.add_file(cf)
+        return cf
+
+    def within_budget(self) -> bool:
+        return (self.max_resident_bytes is not None
+                and self.resident_bytes <= self.max_resident_bytes)
+
+    def enforce(self) -> int:
+        """Reclaim from the share's OWN files until inside the budget.
+
+        Victim order: biggest-resident member first (the churner pays
+        first), each file's :meth:`CachedFile.sweep` supplying clock
+        second chances.  Bounded: one pass over the members, each sweep
+        capped at two laps, and a no-progress member is skipped — the
+        call terminates even with every block pinned.  Returns bytes
+        freed (mount-wide accounting kept exact).
+        """
+        if self.max_resident_bytes is None:
+            return 0
+        freed = 0
+        for cf in sorted(self.files(), key=lambda f: -f.resident_bytes):
+            over = self.resident_bytes - self.max_resident_bytes
+            if over <= 0:
+                break
+            got = cf.sweep(over)
+            if got and cf._fs is not None:
+                cf._fs._resident_delta(-got)
+            freed += got
+        return freed
+
+
 class PGFuseFS:
     """The "mount": a set of cached files under one shared memory budget.
 
@@ -636,7 +743,8 @@ class PGFuseFS:
                  eviction: str = EVICT_LRU,
                  file_budgets: Optional[Dict[str, int]] = None,
                  retries: int = 0,
-                 retry_backoff_s: float = 0.005):
+                 retry_backoff_s: float = 0.005,
+                 clock=None):
         if eviction not in EVICTION_POLICIES:
             raise ValueError(f"eviction must be one of {EVICTION_POLICIES}, "
                              f"got {eviction!r}")
@@ -647,11 +755,17 @@ class PGFuseFS:
         self.eviction = eviction
         self.retries = int(retries)
         self.retry_backoff_s = float(retry_backoff_s)
+        self.clock = clock
         # per-file resident caps keyed by fspath; applied at mount() and
         # retroactively by set_file_budget()
         self._file_budgets = {os.fspath(k): int(v)
                               for k, v in (file_budgets or {}).items()}
         self._files: Dict[str, CachedFile] = {}
+        self._shares: Dict[str, EngineShare] = {}
+        # unmount refcounts for files several consumers mount and later
+        # release independently (two tenants over one topology): see
+        # retain()/unmount() — plain mount() calls do NOT count
+        self._file_refs: Dict[str, int] = {}
         self._lock = threading.Lock()
         self._resident = 0
 
@@ -662,6 +776,53 @@ class PGFuseFS:
     @property
     def resident_bytes(self) -> int:
         return self._resident
+
+    # -- multi-tenant engine shares ----------------------------------------
+    #: "budget argument omitted" marker for register_engine — distinct
+    #: from an explicit None, which means "uncap"
+    _BUDGET_UNSET = object()
+
+    def register_engine(self, name: str,
+                        max_resident_bytes=_BUDGET_UNSET) -> EngineShare:
+        """Create (or fetch) the named :class:`EngineShare`.
+
+        Re-registering an existing name WITH a budget argument resizes
+        it in place (and enforces the new cap immediately), so a serving
+        fleet can resize tenants' slices at runtime; an explicit ``None``
+        uncaps.  Omitting the argument fetches the share untouched — a
+        fetch must never silently delete a tenant's cap/reservation.
+        """
+        with self._lock:
+            share = self._shares.get(name)
+            if share is None:
+                budget = (None if max_resident_bytes is self._BUDGET_UNSET
+                          else max_resident_bytes)
+                share = EngineShare(self, name, budget)
+                self._shares[name] = share
+                return share
+        if max_resident_bytes is self._BUDGET_UNSET:
+            return share
+        share.max_resident_bytes = (None if max_resident_bytes is None
+                                    else int(max_resident_bytes))
+        share.enforce()
+        return share
+
+    def engine_share(self, name: str) -> Optional[EngineShare]:
+        with self._lock:
+            return self._shares.get(name)
+
+    def retain(self, path: Union[str, os.PathLike]) -> None:
+        """Declare a long-lived co-owner of one mounted file.
+
+        Each retain is paired with one later ``unmount(path)``, which
+        only truly unmounts once every retainer released — so two
+        GraphHandles over the SAME CompBin file on a shared mount can
+        close independently without one dropping the other's warm
+        cache.  Plain :meth:`mount` calls (used freely as accessors) do
+        not count."""
+        key = os.fspath(path)
+        with self._lock:
+            self._file_refs[key] = self._file_refs.get(key, 0) + 1
 
     def set_file_budget(self, path: Union[str, os.PathLike],
                         max_resident_bytes: Optional[int]) -> None:
@@ -686,11 +847,13 @@ class PGFuseFS:
         """Revoke idle blocks while over the mount-wide budget.
 
         Files holding no more than their OWN declared budget are
-        protected in the first pass: a per-file budget is a reservation
-        as well as a cap, so another file's churn cannot evict a
-        budgeted file's warm set while it stays inside its share.  Only
-        if the unprotected files cannot cover the overage (budgets that
-        oversubscribe the mount) does a second pass consider everyone.
+        protected in the first pass, and so are the member files of any
+        ENGINE share still inside its share budget: per-file and
+        per-engine budgets are reservations as well as caps, so another
+        tenant's churn cannot evict a budgeted warm set while it stays
+        inside its slice.  Only if the unprotected files cannot cover
+        the overage (budgets that oversubscribe the mount) does a
+        second pass consider everyone.
         Victim selection inside a pass honors ``self.eviction``: LRU
         takes a global strict last-access order; clock sweeps files
         biggest-resident first (the churner pays first), each file's own
@@ -702,8 +865,10 @@ class PGFuseFS:
             files = list(self._files.values())
 
         def within_budget(cf: CachedFile) -> bool:
-            return (cf.max_resident_bytes is not None
-                    and cf.resident_bytes <= cf.max_resident_bytes)
+            if (cf.max_resident_bytes is not None
+                    and cf.resident_bytes <= cf.max_resident_bytes):
+                return True
+            return cf.share is not None and cf.share.within_budget()
 
         for victims in ([cf for cf in files if not within_budget(cf)], files):
             if self._resident <= self.max_resident_bytes:
@@ -731,21 +896,39 @@ class PGFuseFS:
 
     def mount(self, path: Union[str, os.PathLike], *,
               max_resident_bytes: Optional[int] = None,
-              readahead: Optional[int] = None) -> CachedFile:
+              readahead: Optional[int] = None,
+              engine: Optional[Union[str, EngineShare]] = None) -> CachedFile:
         """Mount (or return the existing cache of) one file.
 
         ``max_resident_bytes`` sets the file's budget at first mount (and
         registers it for the mount's lifetime); ``readahead`` overrides
         the mount default for THIS file — a random-access consumer mounts
         its file with ``readahead=0`` next to a sequentially-streamed
-        neighbor without splitting the memory budget.
+        neighbor without splitting the memory budget.  ``engine`` claims
+        the file for a registered :class:`EngineShare` (by object or
+        name), layering that tenant's budget over the per-file one.
         """
+        share = None
+        if engine is not None:
+            # resolve the share BEFORE opening anything: an unknown name
+            # is an error (a typo must not silently strand the file in a
+            # fresh uncapped share), and raising here must not leak a
+            # freshly created CachedFile/fd
+            if isinstance(engine, EngineShare):
+                share = engine
+            else:
+                share = self.engine_share(engine)
+                if share is None:
+                    raise ValueError(
+                        f"unknown engine share {engine!r}; call "
+                        f"register_engine() first")
         key = os.fspath(path)
         with self._lock:
             if max_resident_bytes is not None:
                 self._file_budgets[key] = int(max_resident_bytes)
             cf = self._files.get(key)
-            if cf is None:
+            created = cf is None
+            if created:
                 cf = CachedFile(
                     key, block_size=self.block_size, fs=self,
                     pread_fn=self.pread_fn,
@@ -753,16 +936,19 @@ class PGFuseFS:
                     eviction=self.eviction,
                     max_resident_bytes=self._file_budgets.get(key),
                     retries=self.retries,
-                    retry_backoff_s=self.retry_backoff_s)
+                    retry_backoff_s=self.retry_backoff_s,
+                    clock=self.clock)
                 self._files[key] = cf
-                return cf
-        # already mounted: apply the overrides to the LIVE cache rather
-        # than silently recording a budget that is never enforced
-        if readahead is not None:
-            cf.readahead = int(readahead)
-        if max_resident_bytes is not None:
-            cf.max_resident_bytes = int(max_resident_bytes)
-            cf._enforce_file_budget()
+        if not created:
+            # already mounted: apply the overrides to the LIVE cache rather
+            # than silently recording a budget that is never enforced
+            if readahead is not None:
+                cf.readahead = int(readahead)
+            if max_resident_bytes is not None:
+                cf.max_resident_bytes = int(max_resident_bytes)
+                cf._enforce_file_budget()
+        if share is not None:
+            share.add_file(cf)
         return cf
 
     def open(self, path: Union[str, os.PathLike]) -> CachedFileHandle:
@@ -779,10 +965,21 @@ class PGFuseFS:
         with self._lock:
             if path is None:
                 files, self._files = list(self._files.values()), {}
+                self._file_refs.clear()
             else:
-                cf = self._files.pop(os.fspath(path), None)
+                key = os.fspath(path)
+                refs = self._file_refs.get(key, 0)
+                if refs > 1:  # other retainers still hold this file
+                    self._file_refs[key] = refs - 1
+                    return
+                self._file_refs.pop(key, None)
+                cf = self._files.pop(key, None)
                 files = [cf] if cf else []
         for cf in files:
+            if cf.share is not None:
+                with cf.share._lock:
+                    cf.share._files.pop(cf.path, None)
+                cf.share = None
             cf.close()
 
     def __enter__(self) -> "PGFuseFS":

@@ -183,6 +183,60 @@ def choose_access_mode(workload: str, *,
                f"prefetch and exact recency eviction")
 
 
+@dataclasses.dataclass
+class QueryDecodePlan:
+    """Where the query engine runs eq. (1) for ONE micro-batch."""
+
+    mode: str      # "device" (one H2D + Pallas kernel) | "host" (numpy)
+    reason: str
+
+    @property
+    def device(self) -> bool:
+        return self.mode == "device"
+
+
+#: below this many edges per micro-batch the device dispatch + transfer
+#: overhead exceeds the host shift+adds it replaces (per-batch fixed cost
+#: ~tens of microseconds vs ~5 ns/edge host decode)
+QUERY_DEVICE_MIN_EDGES = 4096
+
+
+def choose_query_decode(n_edges: int, b: int, *,
+                        n_vertices: Optional[int] = None,
+                        min_edges: int = QUERY_DEVICE_MIN_EDGES
+                        ) -> QueryDecodePlan:
+    """Per-micro-batch decode placement for the random-access query path.
+
+    The serving engine knows each batch's exact edge mass AFTER the
+    offsets gather and BEFORE any packed byte is decoded, so placement
+    is a per-batch decision, not a per-engine one: large-fanout batches
+    (hub-heavy frontiers, whole sampler layers) ship their merged packed
+    runs to the device in one transfer and decode next to the gathers
+    they feed — the H2D moves ``b/4`` of the decoded bytes, same as the
+    streaming loader — while small batches stay on host, where eq. (1)
+    costs less than a device dispatch.  Mirrors
+    :func:`choose_stream_decode`'s lane constraint: IDs must fit int32
+    lanes, so ``b > 4`` or ``|V| > 2^31`` always decodes on host.
+    """
+    if n_edges < 0:
+        raise ValueError(f"n_edges must be >= 0, got {n_edges}")
+    if not 1 <= b <= 8:
+        raise ValueError(f"b must be in [1,8], got {b}")
+    if b > 4:
+        return QueryDecodePlan(
+            "host", f"CompBin b={b}: IDs exceed int32 lanes; host decodes")
+    if n_vertices is not None and n_vertices > (1 << 31):
+        return QueryDecodePlan(
+            "host", f"|V|={n_vertices} overflows int32 lanes; host decodes")
+    if n_edges < min_edges:
+        return QueryDecodePlan(
+            "host", f"batch of {n_edges} edges < {min_edges}: device "
+                    f"dispatch+transfer overhead exceeds the shift+adds")
+    return QueryDecodePlan(
+        "device", f"batch of {n_edges} edges: one H2D of {b}*{n_edges} "
+                  f"packed bytes, VPU decode next to the gathers it feeds")
+
+
 def choose_stream_parts(n_devices_total: int = 1, process_count: int = 1,
                         min_parts_per_process: int = 8) -> int:
     """Global partition count for a (possibly multi-host) streamed load.

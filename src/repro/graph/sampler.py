@@ -76,7 +76,10 @@ class NeighborSampler:
         """
         if self._batched:
             # the engine dedups internally — handing it the raw frontier
-            # (repeated hubs and all) keeps its dedup-ratio stats honest
+            # (repeated hubs and all) keeps its dedup-ratio stats honest.
+            # The per-slot lists come back as views into the decoded
+            # spans, so this is already copy-free; the engine's ragged
+            # form exists for consumers that want ONE flat buffer.
             live = nodes[valid]
             lists = self._g.neighbors_batch(live)
             return {int(v): np.asarray(nbrs) for v, nbrs in zip(live, lists)}

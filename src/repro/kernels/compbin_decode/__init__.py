@@ -1,4 +1,5 @@
 from repro.kernels.compbin_decode.ops import (STREAM_GRANULE_IDS,  # noqa: F401
                                               compbin_decode,
+                                              decode_packed_stream,
                                               pad_packed_for_stream)
 from repro.kernels.compbin_decode.ref import compbin_decode_ref  # noqa: F401

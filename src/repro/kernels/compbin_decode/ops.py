@@ -73,6 +73,32 @@ def _decode_impl(packed: jnp.ndarray, b: int, n: int, block_rows: int,
     return out.reshape(-1)[:n]
 
 
+def decode_packed_stream(raw: np.ndarray, b: int, *,
+                         block_rows: int = 256,
+                         interpret: bool | None = None,
+                         use_kernel: bool = True
+                         ) -> tuple[np.ndarray, int]:
+    """One-transfer device decode of a host-side packed byte stream.
+
+    The serving path's building block: ``raw`` (uint8, ``n*b`` bytes —
+    e.g. a micro-batch's merged packed-byte runs concatenated) is padded
+    to a :func:`stream_bucket_ids` bucket, shipped with ONE explicit
+    ``jax.device_put``, decoded by the Pallas kernel, and returned as
+    int64 IDs on host, bit-identical to
+    :func:`repro.core.compbin.decode_ids`.  Returns ``(ids, bytes_h2d)``
+    where ``bytes_h2d`` is the padded transfer size (what actually
+    crossed the link), so callers can account H2D traffic exactly.
+    """
+    raw = np.ascontiguousarray(raw, dtype=np.uint8).reshape(-1)
+    if raw.size == 0:
+        return np.zeros(0, dtype=np.int64), 0
+    padded, n = pad_packed_for_stream(raw, b)
+    dev = jax.device_put(padded)                # the batch's single H2D
+    out = compbin_decode(dev, b, block_rows=block_rows,
+                         interpret=interpret, use_kernel=use_kernel)
+    return np.asarray(out[:n]).astype(np.int64), padded.size
+
+
 def compbin_decode(packed: jnp.ndarray, b: int, *, block_rows: int = 256,
                    interpret: bool | None = None,
                    use_kernel: bool = True) -> jnp.ndarray:

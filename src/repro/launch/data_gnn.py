@@ -114,6 +114,20 @@ def block_to_batch(arch_id: str, cfg, block: SampledBlock, rng) -> dict:
     return batch
 
 
+def device_batch(np_batch: dict) -> dict:
+    """Ship a whole numpy batch dict to the accelerator with ONE
+    ``jax.device_put`` call.
+
+    The serving path assembles every tensor of a request batch on the
+    host first (feature rows, edge index, labels/masks) and transfers
+    them together — one H2D dispatch per request batch instead of one
+    implicit transfer per ``jnp.asarray``, which is where per-request
+    latency went on the PR-4 path."""
+    import jax
+
+    return jax.device_put(np_batch)
+
+
 def sampled_store_batch(arch_id: str, cfg, block: SampledBlock, feats,
                         labels=None) -> dict:
     """Minibatch dict from a sampled block with REAL per-node tensors:
@@ -126,10 +140,10 @@ def sampled_store_batch(arch_id: str, cfg, block: SampledBlock, feats,
     objects, typically mounted on the SAME PG-Fuse instance as the graph
     the block was sampled from (one memory budget for topology + features
     + labels).  Row gathers go through
-    :func:`repro.query.engine.gather_rows` (dedup + run-coalesced reads).
+    :func:`repro.query.engine.gather_rows` (dedup + run-coalesced reads),
+    and the assembled batch crosses to the device as ONE transfer
+    (:func:`device_batch`).
     """
-    import jax.numpy as jnp
-
     from repro.query.engine import gather_rows
 
     src, dst, n = block_to_edges(block)
@@ -137,9 +151,9 @@ def sampled_store_batch(arch_id: str, cfg, block: SampledBlock, feats,
     valid = np.concatenate(block.layer_valid)
     x = gather_rows(feats, np.where(valid, nodes, -1))
     batch = {
-        "x": jnp.asarray(np.ascontiguousarray(x, dtype=np.float32)),
-        "edge_src": jnp.asarray(src.astype(np.int32)),
-        "edge_dst": jnp.asarray(dst.astype(np.int32)),
+        "x": np.ascontiguousarray(x, dtype=np.float32),
+        "edge_src": src.astype(np.int32),
+        "edge_dst": dst.astype(np.int32),
     }
     if arch_id in ("gcn-cora", "pna"):
         n_seeds = len(block.seeds)
@@ -150,9 +164,9 @@ def sampled_store_batch(arch_id: str, cfg, block: SampledBlock, feats,
             lab[:n_seeds] = fam[:, 0].astype(np.int64)
             # only seeds the store marks as training rows contribute loss
             mask[:n_seeds] = fam[:, 1].astype(bool)
-        batch["labels"] = jnp.asarray(lab)
-        batch["label_mask"] = jnp.asarray(mask)
-    return batch
+        batch["labels"] = lab
+        batch["label_mask"] = mask
+    return device_batch(batch)
 
 
 def shards_to_edge_index(shards) -> tuple:

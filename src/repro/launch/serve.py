@@ -10,6 +10,7 @@ from __future__ import annotations
 
 import argparse
 import logging
+import os
 import time
 
 import jax
@@ -77,20 +78,32 @@ def serve_din(cfg, *, batch: int, n_requests: int) -> None:
 
 def make_gnn_server(arch_id: str, cfg, workdir: str, *,
                     fanouts=(5, 5), use_pgfuse: bool = True,
-                    seed: int = 0):
+                    seed: int = 0, decode: str = "auto",
+                    fs=None, engine_name: str = None,
+                    engine_budget: int = None):
     """Build the end-to-end GNN inference server over CompBin storage.
 
     Returns ``(answer, engine, close)``: ``answer(vertex_ids)`` runs one
     request batch — k-hop fanout sample through the
     :class:`repro.query.NeighborQueryEngine` (deduplicated, coalesced
-    random access), feature gather from the column-family store on the
-    SAME PG-Fuse mount, GCN forward — and returns the seeds' logits as a
-    numpy array.  The mount runs the random-access policy
+    random access; ``decode`` places eq. (1) per micro-batch —
+    "auto" routes large fanouts to the Pallas device kernel, one H2D of
+    merged packed runs per batch), feature gather from the column-family
+    store on the SAME PG-Fuse mount, GCN forward — and returns the
+    seeds' logits as a numpy array; the whole batch crosses to the
+    device as ONE transfer (``data_gnn.device_batch``).  The mount runs
+    the random-access policy
     (:func:`repro.core.policy.choose_access_mode`): readahead off, clock
     eviction, feature churn capped so the hot offset blocks stay
     resident.  The sampler is seeded, so a given request stream is
     reproducible — tests replay it against an in-memory CSR and demand
     byte-identical answers.
+
+    Multi-tenant: pass ``fs=`` (a shared
+    :class:`repro.core.pgfuse.PGFuseFS` mount) plus ``engine_name`` /
+    ``engine_budget`` and this server's files join ONE
+    :class:`~repro.core.pgfuse.EngineShare` — several models then serve
+    from one budget without evicting each other's warm sets.
     """
     import jax
 
@@ -106,17 +119,30 @@ def make_gnn_server(arch_id: str, cfg, workdir: str, *,
     gp, fp, _ = ensure_gnn_assets(workdir, d_in, n_classes,
                                   block_size=block_size)
     amode = policy.choose_access_mode("serve")
-    budget = 256 * block_size
-    g = paragrapher.open_graph(
-        gp, use_pgfuse=use_pgfuse, pgfuse_block_size=block_size,
-        pgfuse_readahead=amode.readahead, pgfuse_eviction=amode.eviction,
-        pgfuse_max_resident_bytes=budget if use_pgfuse else None)
+    budget = engine_budget if engine_budget is not None else 256 * block_size
+    share = None
+    if fs is not None:
+        # default share name is keyed by the asset dir, NOT just the
+        # arch: two same-arch tenants on one mount must land in two
+        # distinct shares (register_engine by an existing name returns —
+        # and resizes — that share)
+        share = fs.register_engine(
+            engine_name or f"{arch_id}:{os.path.abspath(workdir)}", budget)
+        g = paragrapher.open_graph(
+            gp, pgfuse_fs=fs, pgfuse_readahead=amode.readahead,
+            pgfuse_engine=share)
+    else:
+        g = paragrapher.open_graph(
+            gp, use_pgfuse=use_pgfuse, pgfuse_block_size=block_size,
+            pgfuse_readahead=amode.readahead, pgfuse_eviction=amode.eviction,
+            pgfuse_max_resident_bytes=budget if use_pgfuse else None)
     churn_cap = (int(amode.churn_budget_fraction * budget)
                  if amode.churn_budget_fraction else None)
     feats = featstore.open_featstore(fp, fs=g.fs,
                                      pgfuse_file_budget=churn_cap,
-                                     pgfuse_file_readahead=0)
-    engine = NeighborQueryEngine(g)
+                                     pgfuse_file_readahead=0,
+                                     pgfuse_engine=share)
+    engine = NeighborQueryEngine(g, decode=decode)
     sampler = NeighborSampler(engine, fanouts=fanouts, seed=seed)
     mod = _GNN_MODULES[arch_id]
     params = mod.init_params(cfg, jax.random.key(0))
@@ -130,6 +156,9 @@ def make_gnn_server(arch_id: str, cfg, workdir: str, *,
         return np.asarray(logits[:len(block.seeds)])
 
     def close() -> None:
+        # both handles hold refcounted retains on the (possibly shared)
+        # mount: each close releases its own file, and a file other
+        # tenants still retain stays warm for them
         engine.close()
         feats.close()
         g.close()
@@ -167,10 +196,12 @@ def serve_gnn(arch_id: str, cfg, *, batch: int, n_requests: int,
                if pg else 0.0)
         log.info("GNN serve batch=%d: p50 %.2f ms p99 %.2f ms (%d reqs); "
                  "query dedup %.2fx, %d blocks touched, %d coalesced "
-                 "reads, cache hit rate %.2f",
+                 "reads, cache hit rate %.2f; %d/%d batches device-"
+                 "decoded (%.1f KiB H2D), window closes %s",
                  batch, np.percentile(lat_ms, 50), np.percentile(lat_ms, 99),
                  len(lat_ms), st.dedup_ratio, st.blocks_touched,
-                 st.coalesced_reads, hit)
+                 st.coalesced_reads, hit, st.device_batches, st.batches,
+                 st.bytes_h2d / 1024, st.close_reasons)
     finally:
         close()
 

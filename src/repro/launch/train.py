@@ -104,7 +104,10 @@ def _gnn_sampled_batches(arch_id: str, cfg, tmpdir: str, use_pgfuse: bool,
                                      pgfuse_file_budget=churn_cap,
                                      pgfuse_file_readahead=0)
     labels = featstore.open_featstore(lp, fs=g.fs, pgfuse_file_readahead=0)
-    engine = NeighborQueryEngine(g)
+    # "auto" decode: each layer's frontier batch picks host vs device by
+    # its exact edge mass (policy.choose_query_decode) — large sampler
+    # fanouts ship ONE H2D of merged packed runs to the Pallas kernel
+    engine = NeighborQueryEngine(g, decode="auto")
     sampler = NeighborSampler(engine, fanouts=fanouts, seed=0)
     rng = np.random.default_rng(0)
     n = g.n_vertices
@@ -120,9 +123,11 @@ def _gnn_sampled_batches(arch_id: str, cfg, tmpdir: str, use_pgfuse: bool,
             if step % 50 == 0:
                 st = engine.stats
                 log.info("query engine after %d batches: dedup %.2fx, "
-                         "%d blocks touched, p50 %.2f ms",
+                         "%d blocks touched, p50 %.2f ms, %d device-"
+                         "decoded (%.1f KiB H2D)",
                          st.batches, st.dedup_ratio, st.blocks_touched,
-                         st.p50_s * 1e3)
+                         st.p50_s * 1e3, st.device_batches,
+                         st.bytes_h2d / 1024)
 
     return gen()
 

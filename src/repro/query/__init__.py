@@ -1,2 +1,4 @@
-from repro.query.engine import (NeighborQueryEngine,  # noqa: F401
-                                QueryFuture, QueryStats, gather_rows)
+from repro.query.engine import (DECODE_MODES,  # noqa: F401
+                                NeighborQueryEngine, QueryFuture, QueryStats,
+                                gather_rows)
+from repro.query.window import CLOSE_REASONS, AdaptiveWindow  # noqa: F401

@@ -11,11 +11,19 @@ The engine turns that property into a serving-grade query path:
   neighbor ranges are **coalesced** into merged range reads (two vertices
   whose bytes share a PG-Fuse block cost one request, not two), and the
   packed bytes are decoded with eq. (1)'s shift+adds;
+* the packed bytes of a **large-fanout batch decode on the device**:
+  the merged runs ship in ONE ``jax.device_put`` and the Pallas
+  ``compbin_decode`` kernel runs eq. (1) next to the gathers it feeds —
+  host and device modes are bit-identical, and
+  :func:`repro.core.policy.choose_query_decode` places each micro-batch
+  by its exact edge mass (known after the offsets gather, before any
+  byte is decoded);
 * an **async request queue** micro-batches concurrent callers: requests
   arriving within ``window_s`` (or until ``max_batch`` ids are pending)
-  execute as ONE coalesced batch, so concurrent inference traffic for
-  overlapping neighborhoods — the common case under power-law degree
-  distributions — shares block fetches across requests;
+  execute as ONE coalesced batch, and the **adaptive window**
+  (:class:`repro.query.window.AdaptiveWindow`) closes the batch EARLY
+  the moment the pending dedup ratio stops improving — waiting only
+  pays while concurrent traffic overlaps;
 * :class:`QueryStats` accounts every request: virtual-clock latency
   percentiles (p50/p99 under an injectable ``clock``, so benchmarks
   measure the *request pattern* against a simulated storage clock, not
@@ -38,7 +46,11 @@ from typing import Callable, List, Optional, Sequence
 import numpy as np
 
 from repro.core import compbin
+from repro.core import policy as _policy
 from repro.core.paragrapher import FORMAT_COMPBIN, GraphHandle
+from repro.query.window import AdaptiveWindow
+
+DECODE_MODES = ("host", "device", "auto")
 
 
 def _merge_ranges(ranges: List[tuple], gap: int) -> List[tuple]:
@@ -91,6 +103,11 @@ class QueryStats:
     blocks_touched: int = 0    # unique cache blocks addressed (per batch)
     bytes_gathered: int = 0    # packed+offset bytes actually needed
     edges_returned: int = 0    # neighbor ids handed back to callers
+    device_batches: int = 0    # micro-batches decoded on device
+    bytes_h2d: int = 0         # packed bytes shipped for device decode
+    # why each executed batch closed ("full"/"plateau"/"timeout"/"flush"/
+    # "direct"); invariant: sum(close_reasons.values()) == batches
+    close_reasons: dict = dataclasses.field(default_factory=dict)
     latencies_s: list = dataclasses.field(default_factory=list)
 
     @property
@@ -124,9 +141,13 @@ class QueryStats:
     def reset(self) -> "QueryStats":
         """Zero in place; returns the pre-reset snapshot."""
         snap = dataclasses.replace(self,
-                                   latencies_s=list(self.latencies_s))
+                                   latencies_s=list(self.latencies_s),
+                                   close_reasons=dict(self.close_reasons))
         for f in dataclasses.fields(self):
-            setattr(self, f.name, [] if f.name == "latencies_s" else 0)
+            cur = getattr(self, f.name)
+            setattr(self, f.name,
+                    [] if isinstance(cur, list)
+                    else {} if isinstance(cur, dict) else 0)
         return snap
 
 
@@ -183,14 +204,26 @@ class NeighborQueryEngine:
                  max_batch: int = 1024,
                  window_s: float = 0.002,
                  merge_gap: Optional[int] = None,
+                 decode: str = "auto",
+                 adaptive_window: bool = True,
+                 window_patience: int = 2,
+                 window_min_overlap: float = 0.05,
                  clock: Callable[[], float] = time.perf_counter):
         if graph.format != FORMAT_COMPBIN:
             raise ValueError(
                 f"random-access queries need CompBin's fixed-width direct "
                 f"addressing, not {graph.format!r} (WebGraph requires a "
                 f"sequential decode per block of vertices)")
+        if decode not in DECODE_MODES:
+            raise ValueError(f"decode must be one of {DECODE_MODES}, "
+                             f"got {decode!r}")
+        if decode == "device" and graph.n_vertices > (1 << 31):
+            raise ValueError(
+                f"|V|={graph.n_vertices} overflows the kernel's int32 "
+                f"lanes; use decode='host' (or 'auto', which routes there)")
         self._graph = graph
         self._clock = clock
+        self.decode = decode
         self.max_batch = int(max_batch)
         self.window_s = float(window_s)
         # header fields pin the direct-addressing arithmetic
@@ -211,10 +244,16 @@ class NeighborQueryEngine:
         # _full short-circuits the batching window when max_batch ids
         # are already pending
         self._pending: List[QueryFuture] = []
-        self._pending_ids = 0
         self._pending_lock = threading.Lock()
         self._have_work = threading.Event()
         self._full = threading.Event()
+        # the window decides WHEN the pending batch executes; its clock is
+        # the engine's, so benches/tests drive it virtually
+        self._window = AdaptiveWindow(
+            window_s=self.window_s, max_batch=self.max_batch,
+            adaptive=adaptive_window, patience=window_patience,
+            min_overlap=window_min_overlap, clock=clock)
+        self._close_reason: Optional[str] = None
         self._closed = False
         self._worker: Optional[threading.Thread] = None
 
@@ -311,12 +350,53 @@ class NeighborQueryEngine:
             return self._graph.fs.mount(self._graph.path), False
         return open(self._graph.path, "rb"), True
 
-    def neighbors_batch(self, vertices) -> List[np.ndarray]:
+    # -- decode placement (the tentpole of serving-path v2) ----------------
+    def _decode_plan(self, n_edges: int) -> "_policy.QueryDecodePlan":
+        """Host-vs-device placement for ONE micro-batch of ``n_edges``."""
+        if self.decode == "host":
+            return _policy.QueryDecodePlan("host", "engine pinned to host")
+        if self.decode == "device":
+            return _policy.QueryDecodePlan("device", "engine pinned to device")
+        return _policy.choose_query_decode(n_edges, self._b,
+                                           n_vertices=self.n_vertices)
+
+    def _decode_host(self, packed: List[np.ndarray]
+                     ) -> tuple[List[np.ndarray], int]:
+        """Eq. (1) on the host, one span at a time.  Returns (decoded
+        int64 arrays, 0 bytes shipped)."""
+        return [compbin.decode_ids(p, self._b).astype(np.int64)
+                for p in packed], 0
+
+    def _decode_device(self, packed: List[np.ndarray]
+                       ) -> tuple[List[np.ndarray], int]:
+        """Eq. (1) on the device: the batch's merged packed runs ship as
+        ONE transfer, the Pallas kernel decodes them, and the flat id
+        stream is split back into per-span views — bit-identical to
+        :meth:`_decode_host`.  Returns (decoded arrays, H2D bytes)."""
+        from repro.kernels.compbin_decode import decode_packed_stream
+
+        if not packed:
+            return [], 0
+        lens = np.array([p.size // self._b for p in packed], dtype=np.int64)
+        if int(lens.sum()) == 0:
+            return [np.zeros(0, np.int64) for _ in packed], 0
+        allbytes = np.concatenate(packed)
+        ids, nbytes_h2d = decode_packed_stream(allbytes, self._b)
+        # per-span COPIES, matching the host path's independent arrays:
+        # handing out views into the flat batch buffer would let one
+        # retained hub list pin the whole batch's decoded ids
+        return [a.copy() for a in np.split(ids, np.cumsum(lens)[:-1])], \
+            nbytes_h2d
+
+    def neighbors_batch(self, vertices, *,
+                        _close_reason: str = "direct") -> List[np.ndarray]:
         """Adjacency lists for ``vertices`` (duplicates fine), in order.
 
         The whole batch is deduplicated and fetched with coalesced reads;
         each returned array is the full (decoded) neighbor list of the
-        corresponding input vertex.
+        corresponding input vertex.  ``_close_reason`` is the engine's
+        internal accounting of WHY this batch executed (the async worker
+        passes the window-close reason; direct calls record "direct").
         """
         vertices = np.asarray(vertices, dtype=np.int64).ravel()
         if vertices.size == 0:
@@ -334,8 +414,14 @@ class NeighborQueryEngine:
         finally:
             if own:
                 f.close()
-        decoded = [compbin.decode_ids(p, self._b).astype(np.int64)
-                   for p in packed]
+        # placement per batch: edge mass is exact here (offsets gathered,
+        # nothing decoded yet)
+        n_edges = int((spans[:, 1] - spans[:, 0]).sum()) if len(spans) else 0
+        plan = self._decode_plan(n_edges)
+        if plan.device:
+            decoded, bytes_h2d = self._decode_device(packed)
+        else:
+            decoded, bytes_h2d = self._decode_host(packed)
         result = [decoded[j] for j in inverse]
         latency = self._clock() - t0
         touched = _blocks_of(off_ranges + nbr_ranges, self._block_size)
@@ -348,10 +434,30 @@ class NeighborQueryEngine:
             st.blocks_touched += len(touched)
             st.bytes_gathered += sum(e - s for s, e in off_ranges + nbr_ranges)
             st.edges_returned += sum(len(d) for d in result)
+            st.device_batches += plan.device
+            st.bytes_h2d += bytes_h2d
+            st.close_reasons[_close_reason] = \
+                st.close_reasons.get(_close_reason, 0) + 1
             st.latencies_s.append(latency)
             if len(st.latencies_s) > LATENCY_WINDOW:
                 del st.latencies_s[0]
         return result
+
+    def neighbors_batch_ragged(self, vertices) -> tuple:
+        """Ragged (CSR-shard) form of :meth:`neighbors_batch`: returns
+        ``(offsets, ids)`` where ``ids[offsets[i]:offsets[i+1]]`` is the
+        neighbor list of ``vertices[i]`` — one flat buffer + offsets for
+        consumers that ship the whole frontier onward (e.g. straight
+        into a device gather) instead of a Python list per vertex."""
+        lists = self.neighbors_batch(vertices)
+        offsets = np.zeros(len(lists) + 1, dtype=np.int64)
+        if lists:
+            np.cumsum([len(x) for x in lists], out=offsets[1:])
+            ids = np.concatenate(lists) if offsets[-1] else \
+                np.zeros(0, np.int64)
+        else:
+            ids = np.zeros(0, np.int64)
+        return offsets, ids
 
     def neighbors_of(self, v: int) -> np.ndarray:
         """Single-vertex convenience (GraphHandle-compatible)."""
@@ -364,6 +470,10 @@ class NeighborQueryEngine:
         Requests arriving within ``window_s`` of each other (or until
         ``max_batch`` ids are pending) are coalesced into ONE deduplicated
         fetch — the dedup ratio then counts cross-request sharing too.
+        The adaptive window additionally closes the batch EARLY when the
+        pending dedup ratio stops improving (waiting only pays while
+        concurrent traffic overlaps); every executed batch's close reason
+        lands in ``stats.close_reasons``.
         """
         if self._closed:
             raise ValueError("submit on closed engine")
@@ -371,32 +481,38 @@ class NeighborQueryEngine:
         fut = QueryFuture(vertices, self._clock())
         with self._pending_lock:
             self._pending.append(fut)
-            self._pending_ids += vertices.size
-            full = self._pending_ids >= self.max_batch
+            reason = self._window.arrival(vertices)
+            if reason is not None and self._close_reason is None:
+                self._close_reason = reason
+            close_now = self._close_reason is not None
             if self._worker is None:
                 self._worker = threading.Thread(
                     target=self._worker_loop, daemon=True,
                     name="neighbor-query-engine")
                 self._worker.start()
         self._have_work.set()
-        if full:
+        if close_now:
             self._full.set()
         return fut
 
-    def _take_pending(self) -> List[QueryFuture]:
+    def _take_pending(self, default_reason: str = "flush"
+                      ) -> tuple[List[QueryFuture], str]:
         with self._pending_lock:
             batch, self._pending = self._pending, []
-            self._pending_ids = 0
-        return batch
+            reason = self._close_reason or default_reason
+            self._close_reason = None
+            self._window.reset()
+        return batch, reason
 
-    def _execute(self, batch: List[QueryFuture]) -> None:
+    def _execute(self, batch: List[QueryFuture],
+                 reason: str = "flush") -> None:
         if not batch:
             return
         splits = np.cumsum([f.vertices.size for f in batch])[:-1]
         allv = np.concatenate([f.vertices for f in batch]) \
             if batch else np.zeros(0, np.int64)
         try:
-            results = self.neighbors_batch(allv)
+            results = self.neighbors_batch(allv, _close_reason=reason)
             per_req = [results[a:b] for a, b in
                        zip([0, *splits], [*splits, len(results)])]
             now = self._clock()
@@ -412,16 +528,19 @@ class NeighborQueryEngine:
             self._have_work.wait()   # idle: block, never poll
             if self._closed:
                 return
-            # the micro-batch window: give concurrent callers window_s to
-            # pile on (cut short the moment max_batch ids are pending)
+            # the micro-batch window: give concurrent callers window_s
+            # (REAL time — the engine's injectable clock may be virtual,
+            # and an Event.wait timeout must not come from it) to pile
+            # on; the window (via submit) cuts the wait short on "full"
+            # or "plateau", a wait that expires untriggered is "timeout"
             self._full.wait(timeout=self.window_s)
             self._full.clear()
             self._have_work.clear()  # a submit racing past here re-sets it
-            self._execute(self._take_pending())
+            self._execute(*self._take_pending("timeout"))
 
     def flush(self) -> None:
         """Execute everything pending right now (on the calling thread)."""
-        self._execute(self._take_pending())
+        self._execute(*self._take_pending("flush"))
 
     def close(self) -> None:
         if self._closed:

@@ -1,0 +1,209 @@
+"""The adaptive micro-batch window, in isolation and inside the engine.
+
+The state machine (repro.query.window.AdaptiveWindow) runs on an
+injectable clock with synthetic arrival schedules, so every close
+decision — early on plateau, instant on full, late on timeout — is
+pinned deterministically.  The engine-level tests then assert the
+QueryStats invariant: every executed batch records exactly one close
+reason and sum(close_reasons.values()) == batches.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import paragrapher
+from repro.graph import rmat
+from repro.query import CLOSE_REASONS, AdaptiveWindow, NeighborQueryEngine
+
+RANDOM_KW = dict(use_pgfuse=True, pgfuse_block_size=1 << 12,
+                 pgfuse_readahead=0, pgfuse_eviction="clock")
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+
+# ---------------------------------------------------------------------------
+# the state machine in isolation
+# ---------------------------------------------------------------------------
+
+def test_overlapping_arrivals_keep_window_open_until_timeout():
+    """Arrivals that keep raising the dedup ratio never close early; the
+    window runs its full span and times out."""
+    clk = FakeClock()
+    w = AdaptiveWindow(window_s=1.0, max_batch=1000, clock=clk)
+    hot = np.arange(10)
+    for k in range(6):           # the same hot set over and over
+        clk.t += 0.1
+        assert w.arrival(hot) is None, k
+    assert w.dedup_ratio == 6.0
+    assert not w.timed_out() and 0 < w.remaining() < 1.0
+    clk.t = w._t_open + 1.0
+    assert w.timed_out() and w.remaining() == 0.0
+
+
+def test_disjoint_arrivals_close_on_plateau():
+    """Arrivals sharing nothing stop improving the ratio: after
+    ``patience`` consecutive stale arrivals the window says plateau."""
+    clk = FakeClock()
+    w = AdaptiveWindow(window_s=1.0, max_batch=1000, patience=2, clock=clk)
+    assert w.arrival(np.arange(0, 10)) is None      # opens the window
+    assert w.arrival(np.arange(10, 20)) is None     # stale #1
+    assert w.arrival(np.arange(20, 30)) == "plateau"  # stale #2: close
+    assert w.is_open and w.pending_ids == 30
+
+
+def test_recovering_overlap_resets_patience():
+    """One overlapping arrival in between clears the stale counter —
+    plateau needs CONSECUTIVE non-improving arrivals."""
+    clk = FakeClock()
+    w = AdaptiveWindow(window_s=1.0, max_batch=1000, patience=2, clock=clk)
+    assert w.arrival(np.arange(0, 10)) is None
+    assert w.arrival(np.arange(10, 20)) is None     # stale #1
+    assert w.arrival(np.arange(0, 10)) is None      # overlap: ratio jumps
+    assert w.arrival(np.arange(20, 30)) is None     # stale #1 again
+    assert w.arrival(np.arange(30, 40)) == "plateau"
+
+
+def test_half_overlapping_arrivals_stay_open():
+    """Arrivals that each half-duplicate the pending set must keep the
+    window open indefinitely (waiting still saves half of every
+    arrival's fetches) — the plateau signal is the MARGINAL overlap per
+    arrival, not the delta of the converging cumulative ratio."""
+    clk = FakeClock()
+    w = AdaptiveWindow(window_s=1.0, max_batch=10 ** 6, patience=2,
+                       clock=clk)
+    hot = np.arange(8)
+    for k in range(30):
+        ids = np.concatenate([hot, np.arange(1000 + 8 * k, 1008 + 8 * k)])
+        assert w.arrival(ids) is None, k   # overlap 0.5 every time
+
+
+def test_full_fires_immediately_and_wins_over_plateau():
+    clk = FakeClock()
+    w = AdaptiveWindow(window_s=1.0, max_batch=32, clock=clk)
+    assert w.arrival(np.arange(16)) is None
+    assert w.arrival(np.arange(100, 116)) == "full"   # 32 pending ids
+
+
+def test_fixed_window_never_plateaus():
+    """adaptive=False degrades to PR 4's fixed window: only full/timeout."""
+    clk = FakeClock()
+    w = AdaptiveWindow(window_s=1.0, max_batch=1000, adaptive=False,
+                       clock=clk)
+    for k in range(20):
+        assert w.arrival(np.arange(k * 10, k * 10 + 10)) is None, k
+
+
+def test_reset_forgets_everything():
+    clk = FakeClock()
+    w = AdaptiveWindow(window_s=1.0, max_batch=1000, patience=1, clock=clk)
+    w.arrival(np.arange(10))
+    w.arrival(np.arange(10, 20))
+    w.reset()
+    assert not w.is_open and w.pending_ids == 0 and w.dedup_ratio == 0.0
+    assert w.remaining() == 1.0   # a closed window has its full span left
+    assert w.arrival(np.arange(10)) is None  # fresh history, no stale carry
+
+
+def test_empty_arrivals_never_divide_by_zero():
+    clk = FakeClock()
+    w = AdaptiveWindow(window_s=1.0, max_batch=8, clock=clk)
+    assert w.arrival(np.zeros(0, np.int64)) is None
+    assert w.dedup_ratio == 0.0
+    assert w.arrival(np.zeros(0, np.int64)) is None
+
+
+def test_window_validates_params():
+    with pytest.raises(ValueError, match="window_s"):
+        AdaptiveWindow(window_s=-1.0, max_batch=8)
+    with pytest.raises(ValueError, match="patience"):
+        AdaptiveWindow(window_s=1.0, max_batch=8, patience=0)
+
+
+# ---------------------------------------------------------------------------
+# inside the engine: close reasons + the QueryStats invariant
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def graph_on_disk(tmp_path_factory):
+    d = tmp_path_factory.mktemp("aw")
+    csr = rmat(9, 6, seed=3)
+    gp = str(d / "g.cbin")
+    paragrapher.save_graph(gp, csr, format="compbin")
+    return gp, csr
+
+
+def _assert_invariant(stats) -> None:
+    assert set(stats.close_reasons) <= set(CLOSE_REASONS)
+    assert sum(stats.close_reasons.values()) == stats.batches
+
+
+def test_engine_closes_early_on_disjoint_traffic(graph_on_disk):
+    """Disjoint concurrent requests plateau the window: the engine
+    executes them WITHOUT waiting out a 30 s span (the test would time
+    out otherwise), and records the plateau."""
+    gp, csr = graph_on_disk
+    with paragrapher.open_graph(gp, **RANDOM_KW) as g:
+        with NeighborQueryEngine(g, window_s=30.0, window_patience=2) \
+                as engine:
+            futs = [engine.submit(np.arange(i * 16, i * 16 + 16))
+                    for i in range(4)]
+            for f in futs:
+                f.result(timeout=10)   # resolved long before 30 s
+            st = engine.stats
+            assert st.close_reasons.get("plateau", 0) >= 1
+            _assert_invariant(st)
+
+
+def test_engine_records_full_and_direct_and_flush(graph_on_disk):
+    gp, csr = graph_on_disk
+    with paragrapher.open_graph(gp, **RANDOM_KW) as g:
+        engine = NeighborQueryEngine(g, window_s=30.0, max_batch=32)
+        engine.neighbors_batch([1, 2, 3])           # sync: "direct"
+        fut = engine.submit(np.arange(40))          # >= max_batch: "full"
+        fut.result(timeout=10)
+        slow = engine.submit([5])                   # rides a manual flush
+        engine.flush()
+        slow.result(timeout=10)
+        st = engine.stats
+        assert st.close_reasons.get("direct") == 1
+        assert st.close_reasons.get("full") == 1
+        assert st.close_reasons.get("flush") == 1
+        _assert_invariant(st)
+        engine.close()
+
+
+def test_engine_records_timeout(graph_on_disk):
+    gp, csr = graph_on_disk
+    with paragrapher.open_graph(gp, **RANDOM_KW) as g:
+        with NeighborQueryEngine(g, window_s=0.01) as engine:
+            fut = engine.submit([1, 2])  # alone: nothing closes it early
+            fut.result(timeout=10)
+            st = engine.stats
+            assert st.close_reasons.get("timeout") == 1
+            _assert_invariant(st)
+
+
+def test_invariant_survives_reset_and_mixed_traffic(graph_on_disk):
+    gp, csr = graph_on_disk
+    rng = np.random.default_rng(0)
+    with paragrapher.open_graph(gp, **RANDOM_KW) as g:
+        with NeighborQueryEngine(g, window_s=0.005) as engine:
+            for _ in range(3):
+                engine.neighbors_batch(rng.integers(0, csr.n_vertices, 8))
+            futs = [engine.submit(rng.integers(0, csr.n_vertices, 16))
+                    for _ in range(8)]
+            for f in futs:
+                f.result(timeout=10)
+            _assert_invariant(engine.stats)
+            snap = engine.stats.reset()
+            _assert_invariant(snap)              # snapshot keeps the ledger
+            assert engine.stats.close_reasons == {} \
+                and engine.stats.batches == 0    # zeroed together
+            engine.neighbors_batch([0])
+            _assert_invariant(engine.stats)

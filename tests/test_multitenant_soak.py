@@ -1,0 +1,316 @@
+"""Deterministic multi-tenant soak: two engines on ONE PG-Fuse mount
+under per-engine budgets (the PR-5 tentpole's cache-shares layer).
+
+Everything runs on an injectable virtual clock (PGFuseFS(clock=...)), so
+eviction order — and therefore every assertion — is a property of the
+access sequence alone.  The soak loops scans long past the budgets and
+asserts the three invariants the share layer exists for:
+
+* **isolation** — neither tenant's churn ever evicts the other tenant's
+  warm set (the share is a reservation);
+* **conservation** — the mount's resident accounting equals the sum of
+  its files' at every step, every share stays at/below its budget after
+  enforcement, and the mount stays inside its global budget;
+* **termination** — clock-hand sweeps and share enforcement finish even
+  when every block is pinned or every ref bit is set (no livelock).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import featstore, paragrapher, pgfuse
+from repro.graph import featstore_for_graph, rmat
+from repro.query import NeighborQueryEngine, gather_rows
+
+BS = 1024
+
+
+def _blob(tmp_path, name: str, n_blocks: int, seed: int):
+    rng = np.random.default_rng(seed)
+    p = tmp_path / name
+    p.write_bytes(rng.integers(0, 256, n_blocks * BS,
+                               dtype=np.uint8).tobytes())
+    return str(p)
+
+
+def test_two_tenant_soak_isolation_and_conservation(tmp_path):
+    """Looped scans on a virtual clock: tenant A's warm set survives 50
+    rounds of tenant B churning 4x its own share; budgets hold and
+    accounting stays exact at every round."""
+    hot_a = _blob(tmp_path, "a.bin", 4, 0)
+    scan_b = _blob(tmp_path, "b.bin", 32, 1)
+    vclock = [0.0]
+
+    def tick() -> float:
+        vclock[0] += 1.0
+        return vclock[0]
+
+    fs = pgfuse.PGFuseFS(block_size=BS, max_resident_bytes=12 * BS,
+                         eviction="clock", clock=lambda: vclock[0])
+    with fs:
+        share_a = fs.register_engine("model-a", 4 * BS)
+        share_b = fs.register_engine("model-b", 8 * BS)
+        cf_a = share_a.mount(hot_a)
+        cf_b = share_b.mount(scan_b)
+        for _round in range(50):
+            for b in range(4):          # tenant A touches its warm set
+                cf_a.pread(b * BS, 64)
+                tick()
+            for b in range(32):         # tenant B loops a 4x-budget scan
+                cf_b.pread(b * BS, 64)
+                tick()
+                # B reclaims from ITSELF: never over its share
+                assert share_b.resident_bytes <= 8 * BS
+                # conservation: mount accounting is exactly the sum
+                assert fs.resident_bytes == \
+                    cf_a.resident_bytes + cf_b.resident_bytes
+                assert fs.resident_bytes <= 12 * BS
+            # isolation: B's churn never touched A's warm set
+            assert set(cf_a.resident_blocks()) == set(range(4)), _round
+            assert share_a.resident_bytes == 4 * BS
+        # A was warm on every acquisition after round one
+        assert cf_a.stats.cache_misses == 4
+        assert cf_b.stats.evictions > 0  # B's budget actually bit
+
+
+def test_share_budgets_resize_at_runtime(tmp_path):
+    """Re-registering a share shrinks it immediately (serving fleets
+    resize tenants without remounting), and files may not defect to
+    another tenant's share."""
+    f1 = _blob(tmp_path, "f1.bin", 8, 2)
+    with pgfuse.PGFuseFS(block_size=BS, eviction="clock") as fs:
+        share = fs.register_engine("m", 8 * BS)
+        cf = share.mount(f1)
+        cf.pread(0, 8 * BS)
+        assert share.resident_bytes == 8 * BS
+        fs.register_engine("m", 3 * BS)  # shrink: enforced right here
+        assert share.resident_bytes <= 3 * BS
+        assert fs.resident_bytes == cf.resident_bytes
+        other = fs.register_engine("other", None)
+        with pytest.raises(ValueError, match="at most one share"):
+            other.add_file(cf)
+
+
+def test_mount_by_engine_name_preserves_budget(tmp_path):
+    """Joining a file to a share BY NAME (the open_graph(pgfuse_engine=
+    "name") form) must not rewrite the tenant's budget — only an
+    explicit re-register resizes it."""
+    f1 = _blob(tmp_path, "f1.bin", 4, 7)
+    f2 = _blob(tmp_path, "f2.bin", 4, 8)
+    with pgfuse.PGFuseFS(block_size=BS, eviction="clock") as fs:
+        share = fs.register_engine("m", 2 * BS)
+        fs.mount(f1, engine="m")
+        fs.mount(f2, engine="m")          # by name: budget untouched
+        assert share.max_resident_bytes == 2 * BS
+        assert fs.engine_share("m") is share
+        fs.mount(f1).pread(0, 4 * BS)
+        fs.mount(f2).pread(0, 4 * BS)
+        assert share.resident_bytes <= 2 * BS  # the cap still bites
+        assert fs.mount(f1).share is share
+        # a budget-less register is a FETCH, never an uncap
+        assert fs.register_engine("m") is share
+        assert share.max_resident_bytes == 2 * BS
+        # an unregistered name is a loud error, not a silent share — and
+        # raising for a NEW path must not leak a half-mounted file/fd
+        f3 = _blob(tmp_path, "f3.bin", 2, 9)
+        with pytest.raises(ValueError, match="unknown engine share"):
+            fs.mount(f3, engine="mispelled")
+        assert f3 not in fs._files
+
+
+def test_shared_mount_join_inherits_readahead(tmp_path):
+    """open_graph(pgfuse_fs=...) without an explicit readahead inherits
+    the mount default and never clobbers a live file's setting."""
+    csr = rmat(7, 4, seed=2)
+    gp = str(tmp_path / "g.cbin")
+    paragrapher.save_graph(gp, csr, format="compbin")
+    with pgfuse.PGFuseFS(block_size=1 << 12, readahead=4) as fs:
+        g1 = paragrapher.open_graph(gp, pgfuse_fs=fs)
+        assert fs.mount(gp).readahead == 4       # mount default inherited
+        g2 = paragrapher.open_graph(gp, pgfuse_fs=fs)  # second handle
+        assert fs.mount(gp).readahead == 4       # still untouched
+        g3 = paragrapher.open_graph(gp, pgfuse_fs=fs, pgfuse_readahead=0)
+        assert fs.mount(gp).readahead == 0       # explicit override wins
+        g1.close(), g2.close(), g3.close()
+
+
+def test_sweeps_terminate_under_pins_and_ref_bits(tmp_path):
+    """Clock-hand sweeps are bounded: with every block PINNED a sweep
+    frees nothing and returns; with every ref bit set it frees on the
+    second lap; share enforcement over pinned files returns too."""
+    f1 = _blob(tmp_path, "f1.bin", 6, 3)
+    with pgfuse.PGFuseFS(block_size=BS, eviction="clock") as fs:
+        share = fs.register_engine("m", BS)  # absurdly tight
+        cf = share.mount(f1)
+        for b in range(6):  # pin everything (readers never release)
+            cf.acquire_block(b)
+        assert cf.sweep(10 * BS) == 0          # bounded, frees nothing
+        assert share.enforce() == 0            # terminates over pins
+        for b in range(6):
+            cf.release_block(b)
+        cf._ref[:] = True                      # every bit set: lap 1
+        assert cf.sweep(2 * BS) >= 2 * BS      # clears, lap 2 revokes
+
+
+def test_two_query_engines_share_one_mount(tmp_path):
+    """The serving shape end to end: two NeighborQueryEngines (their
+    graphs + feature stores) on ONE shared mount via
+    open_graph(pgfuse_fs=..., pgfuse_engine=...); tenant B's gather
+    churn leaves tenant A's warm topology resident, and both answer
+    correctly throughout."""
+    csr_a, csr_b = rmat(8, 4, seed=5), rmat(9, 6, seed=6)
+    gp_a, gp_b = str(tmp_path / "a.cbin"), str(tmp_path / "b.cbin")
+    paragrapher.save_graph(gp_a, csr_a, format="compbin")
+    paragrapher.save_graph(gp_b, csr_b, format="compbin")
+    fp_b = featstore_for_graph(gp_b, str(tmp_path / "b.fst"), 16, seed=0,
+                               data_align=1 << 12)
+    vclock = [0.0]
+    fs = pgfuse.PGFuseFS(block_size=1 << 12, max_resident_bytes=64 << 12,
+                         eviction="clock", clock=lambda: vclock[0])
+    with fs:
+        share_a = fs.register_engine("tenant-a", 16 << 12)
+        share_b = fs.register_engine("tenant-b", 32 << 12)
+        g_a = paragrapher.open_graph(gp_a, pgfuse_fs=fs, pgfuse_engine=share_a)
+        g_b = paragrapher.open_graph(gp_b, pgfuse_fs=fs, pgfuse_engine=share_b)
+        feats_b = featstore.open_featstore(fp_b, fs=fs, pgfuse_engine=share_b,
+                                           pgfuse_file_readahead=0)
+        eng_a = NeighborQueryEngine(g_a)
+        eng_b = NeighborQueryEngine(g_b)
+        # warm tenant A, snapshot its resident topology
+        eng_a.neighbors_batch(np.arange(0, csr_a.n_vertices, 3))
+        warm_a = set(fs.mount(gp_a).resident_blocks())
+        assert warm_a
+        rng = np.random.default_rng(0)
+        for _ in range(20):  # tenant B churns queries + feature gathers
+            vclock[0] += 1.0
+            ids = rng.integers(0, csr_b.n_vertices, 128)
+            for v, nbrs in zip(ids, eng_b.neighbors_batch(ids)):
+                assert np.array_equal(nbrs, csr_b.neighbors_of(int(v)))
+            gather_rows(feats_b, rng.integers(0, csr_b.n_vertices, 64))
+            assert share_b.resident_bytes <= 32 << 12
+        # isolation: A's warm set is untouched by B's churn, and A still
+        # answers correctly without another storage miss
+        assert set(fs.mount(gp_a).resident_blocks()) >= warm_a
+        misses = fs.mount(gp_a).stats.cache_misses
+        got = eng_a.neighbors_batch([1, 2, 3])
+        for v, nbrs in zip([1, 2, 3], got):
+            assert np.array_equal(nbrs, csr_a.neighbors_of(v))
+        assert fs.mount(gp_a).stats.cache_misses == misses
+        g_a.close()  # shared mount: closing A must not disturb B...
+        got_b = eng_b.neighbors_batch([7])
+        assert np.array_equal(got_b[0], csr_b.neighbors_of(7))
+        # ...and must fully release A: a dead tenant's share holds no
+        # files and charges nothing against the live tenants
+        assert share_a.files() == [] and share_a.resident_bytes == 0
+        g_b.close()
+        feats_b.close()
+
+
+def test_failed_open_unwinds_shared_mount(tmp_path):
+    """A constructor that fails AFTER mounting (valid magic, corrupt
+    header) must unwind its retain and share membership — there is no
+    handle left to release them later."""
+    bad_g = tmp_path / "bad.cbin"
+    bad_g.write_bytes(b"CBIN" + b"\x00" * 4)      # truncated header
+    bad_f = tmp_path / "bad.fst"
+    bad_f.write_bytes(b"FSTR" + b"\x00" * 4)
+    with pgfuse.PGFuseFS(block_size=1024) as fs:
+        share = fs.register_engine("m", 4096)
+        with pytest.raises(Exception):
+            paragrapher.open_graph(str(bad_g), pgfuse_fs=fs,
+                                   pgfuse_engine=share)
+        with pytest.raises(Exception):
+            featstore.open_featstore(str(bad_f), fs=fs, pgfuse_engine=share)
+        assert share.files() == []
+        assert fs._files == {} and fs._file_refs == {}
+        assert fs.resident_bytes == 0
+
+
+def test_featstore_replicas_close_independently(tmp_path):
+    """Two handles over the SAME feature store on a shared mount (model
+    replicas): the store's file is refcount-retained per handle, so the
+    first close must not drop the second replica's cache."""
+    csr = rmat(7, 4, seed=3)
+    gp = str(tmp_path / "g.cbin")
+    paragrapher.save_graph(gp, csr, format="compbin")
+    fp = featstore_for_graph(gp, str(tmp_path / "g.fst"), 8, seed=0,
+                             data_align=1 << 12)
+    with pgfuse.PGFuseFS(block_size=1 << 12) as fs:
+        h1 = featstore.open_featstore(fp, fs=fs)
+        h2 = featstore.open_featstore(fp, fs=fs)
+        rows = h1.read_rows(0, 4)
+        h1.close()
+        misses = fs.mount(fp).stats.cache_misses
+        assert np.array_equal(h2.read_rows(0, 4), rows)  # cache intact
+        assert fs.mount(fp).stats.cache_misses == misses
+        h2.close()   # last retainer: NOW the file unmounts
+        assert fs.resident_bytes == 0
+
+
+def test_shared_topology_survives_one_tenants_close(tmp_path):
+    """Two engines over the SAME CompBin file on one mount (the shared
+    file stays outside any EngineShare): closing tenant A's handle must
+    not drop tenant B's warm cache — the mount refcounts retained files
+    and truly unmounts only when the last handle closes."""
+    csr = rmat(8, 5, seed=9)
+    gp = str(tmp_path / "shared.cbin")
+    paragrapher.save_graph(gp, csr, format="compbin")
+    with pgfuse.PGFuseFS(block_size=1 << 12, eviction="clock") as fs:
+        g_a = paragrapher.open_graph(gp, pgfuse_fs=fs)
+        g_b = paragrapher.open_graph(gp, pgfuse_fs=fs)
+        eng_b = NeighborQueryEngine(g_b)
+        eng_b.neighbors_batch(np.arange(0, csr.n_vertices, 2))  # warm
+        warm = fs.mount(gp).resident_bytes
+        misses = fs.mount(gp).stats.cache_misses
+        assert warm > 0
+        g_a.close()
+        # B's cache is intact and still serves without a storage miss
+        assert fs.mount(gp).resident_bytes == warm
+        got = eng_b.neighbors_batch([3, 4])
+        for v, nbrs in zip([3, 4], got):
+            assert np.array_equal(nbrs, csr.neighbors_of(v))
+        assert fs.mount(gp).stats.cache_misses == misses
+        g_b.close()   # last handle: NOW the file really unmounts
+        assert fs.resident_bytes == 0
+
+
+def test_tenant_server_close_releases_all_files(tmp_path):
+    """make_gnn_server teardown on a SHARED mount drops every one of the
+    tenant's files (graph AND feature store) — dead tenants must not
+    keep share-protected bytes resident against live ones."""
+    import jax  # noqa: F401  (server construction needs a jax backend)
+
+    from repro.configs import get_arch
+    from repro.launch.serve import make_gnn_server
+
+    import os
+
+    cfg = get_arch("gcn-cora").make_reduced()
+    fs = pgfuse.PGFuseFS(block_size=1 << 16, eviction="clock",
+                         max_resident_bytes=512 << 16)
+    with fs:
+        # no explicit engine_name: SAME-arch tenants must still land in
+        # two distinct shares (default name is keyed by the asset dir)
+        a1, _e1, c1 = make_gnn_server(
+            "gcn-cora", cfg, str(tmp_path / "t1"), fanouts=(3, 2),
+            fs=fs, engine_budget=128 << 16)
+        a2, _e2, c2 = make_gnn_server(
+            "gcn-cora", cfg, str(tmp_path / "t2"), fanouts=(3, 2),
+            fs=fs, engine_budget=256 << 16)
+        name1 = f"gcn-cora:{os.path.abspath(tmp_path / 't1')}"
+        name2 = f"gcn-cora:{os.path.abspath(tmp_path / 't2')}"
+        share1, share2 = fs.engine_share(name1), fs.engine_share(name2)
+        assert share1 is not None and share2 is not None \
+            and share1 is not share2
+        assert share1.max_resident_bytes == 128 << 16
+        assert share2.max_resident_bytes == 256 << 16  # no budget merge
+        assert a1(np.arange(4)).shape[0] == 4   # warms t1's caches
+        assert a2(np.arange(4)).shape[0] == 4
+        assert share1.resident_bytes > 0
+        c1()
+        assert share1.files() == [] and share1.resident_bytes == 0
+        # the live tenant is untouched and still serves
+        assert share2.resident_bytes > 0
+        assert a2(np.arange(4)).shape[0] == 4
+        c2()
+        assert fs.resident_bytes == 0

@@ -1,0 +1,232 @@
+"""Differential fuzz layer over serving-path v2 (the PR-5 lockdown).
+
+Three implementations answer every request trace simultaneously — the
+host-decode engine, the device-decode engine (merged packed runs in one
+transfer through the Pallas kernel), and the in-memory CSR reference —
+and must agree BYTE-identically on neighbors, features, and logits.
+Traces are adversarial by construction: zipf hot heads, duplicate-heavy
+batches, empty batches, edge-less/isolated vertices.  The same
+differential holds under storage-fault injection (transient EIO, short
+reads, latency floors), so the retry/span-fetch machinery is exercised
+on the device path too.
+"""
+
+import errno
+import os
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro.core import paragrapher
+from repro.graph import rmat, synthesize_node_features
+from repro.query import NeighborQueryEngine
+from tests._prop import Draw, prop
+from tests.conftest import FaultyStorage
+
+
+def _zipf_trace(draw: Draw, n_vertices: int, n_batches: int) -> list:
+    """Adversarial request traces: zipf hot head + uniform tail +
+    duplicate folds + occasional empty batches (Draw.vertex_batch), with
+    a hot set shared ACROSS batches so cross-batch caching is hit."""
+    hubs = draw.ints(0, n_vertices - 1, max(4, n_vertices // 16))
+    trace = []
+    for _ in range(n_batches):
+        ids = draw.vertex_batch(n_vertices, max_size=96)
+        if ids.size and draw.bool():  # re-point half the batch at hubs
+            k = draw.int(1, max(1, ids.size // 2))
+            ids[draw.ints(0, ids.size - 1, k)] = \
+                hubs[draw.ints(0, len(hubs) - 1, k)]
+        trace.append(ids)
+    return trace
+
+
+def _check_trace(trace, engines, csr) -> None:
+    """Every engine's answer must equal the CSR reference, byte for byte
+    (values, dtype, per-slot lengths), and the ragged form must slice to
+    the same arrays."""
+    for ids in trace:
+        answers = {name: e.neighbors_batch(ids)
+                   for name, e in engines.items()}
+        for name, got in answers.items():
+            assert len(got) == len(ids)
+            for v, nbrs in zip(ids, got):
+                ref = csr.neighbors_of(int(v)).astype(np.int64)
+                assert nbrs.dtype == np.int64, name
+                assert np.array_equal(nbrs, ref), (name, int(v))
+        # ragged differential on one engine per batch (cheap; the lists
+        # above already pinned the values)
+        name, e = next(iter(engines.items()))
+        offs, flat = e.neighbors_batch_ragged(ids)
+        assert len(offs) == len(ids) + 1
+        for i, nbrs in enumerate(answers[name]):
+            assert np.array_equal(flat[offs[i]:offs[i + 1]], nbrs)
+
+
+@prop(8)
+def test_differential_host_device_csr(draw: Draw):
+    """Arbitrary graphs (incl. empty rows / isolated vertices), arbitrary
+    adversarial traces: host decode == device decode == in-memory CSR."""
+    csr = draw.csr(max_edges=1500)
+    if csr.n_vertices == 0:
+        return
+    with tempfile.TemporaryDirectory() as d:
+        gp = os.path.join(d, "g.cbin")
+        paragrapher.save_graph(gp, csr, format="compbin")
+        kw = dict(use_pgfuse=True,
+                  pgfuse_block_size=draw.choice([512, 1 << 12]),
+                  pgfuse_eviction=draw.choice(["lru", "clock"]),
+                  pgfuse_readahead=0)
+        with paragrapher.open_graph(gp, **kw) as gh, \
+                paragrapher.open_graph(gp, **kw) as gd:
+            engines = {
+                "host": NeighborQueryEngine(gh, decode="host"),
+                "device": NeighborQueryEngine(gd, decode="device"),
+            }
+            _check_trace(_zipf_trace(draw, csr.n_vertices, 4), engines, csr)
+            # the device engine really took the kernel path whenever it
+            # had edges to decode
+            dev = engines["device"].stats
+            assert dev.device_batches == dev.batches
+
+
+@prop(6)
+def test_differential_under_fault_injection(draw: Draw):
+    """The same three-way differential with deterministic RETRYABLE
+    storage faults on BOTH engines' mounts: transient EIOs are retried
+    (and must leave answers byte-identical), latency floors change
+    nothing.  Short reads are deliberately excluded here — they are
+    contract violations the strict path must RAISE on (see
+    test_short_read_on_span_fetch_recovers /
+    test_device_path_surfaces_exhausted_retries for both sides of that
+    contract)."""
+    csr = draw.csr(max_edges=1200)
+    if csr.n_vertices == 0:
+        return
+    with tempfile.TemporaryDirectory() as d:
+        gp = os.path.join(d, "g.cbin")
+        paragrapher.save_graph(gp, csr, format="compbin")
+        kw = dict(use_pgfuse=True, pgfuse_block_size=512,
+                  pgfuse_eviction="clock", pgfuse_readahead=0,
+                  pgfuse_retries=3, pgfuse_retry_backoff_s=0.0)
+        with paragrapher.open_graph(gp, **kw) as gh, \
+                paragrapher.open_graph(gp, **kw) as gd:
+            injectors = {}
+            for name, g in (("host", gh), ("device", gd)):
+                inj = FaultyStorage(latency_s=1e-5 if draw.bool() else 0.0)
+                # spaced injection points: a transient EIO's retry (the
+                # NEXT underlying call) must be clean, or the burst
+                # rightly exhausts the budget (covered separately below)
+                for k in (1, 4, 7):
+                    if draw.bool():
+                        inj.fail_at[k] = OSError(errno.EIO, "flaky OST")
+                injectors[name] = inj.install_graph(g)
+            engines = {
+                "host": NeighborQueryEngine(gh, decode="host"),
+                "device": NeighborQueryEngine(gd, decode="device"),
+            }
+            _check_trace(_zipf_trace(draw, csr.n_vertices, 3), engines, csr)
+            # injected EIOs that fired were absorbed by the retry policy
+            for name, g in (("host", gh), ("device", gd)):
+                fired = sum(1 for (_, _, _, n) in injectors[name].calls
+                            if n == -1)
+                assert g.pgfuse_stats().retried_reads >= fired
+
+
+@pytest.mark.parametrize("decode", ["host", "device"])
+def test_short_read_on_span_fetch_recovers(tmp_path, decode):
+    """A short read on the engine's announced span fetch (the FIRST
+    underlying call of a cold query) drops the affected blocks silently;
+    the strict pread path then re-fetches them whole — answers stay
+    byte-identical and no error surfaces."""
+    csr = rmat(7, 5, seed=4)
+    gp = str(tmp_path / "g.cbin")
+    paragrapher.save_graph(gp, csr, format="compbin")
+    with paragrapher.open_graph(gp, use_pgfuse=True, pgfuse_block_size=512,
+                                pgfuse_readahead=0) as g:
+        inj = FaultyStorage()
+        inj.truncate_at[1] = 60  # the cold offsets span fetch comes first
+        inj.install_graph(g)
+        engine = NeighborQueryEngine(g, decode=decode)
+        got = engine.neighbors_batch([0, 5, 9])
+        for v, nbrs in zip([0, 5, 9], got):
+            assert np.array_equal(nbrs, csr.neighbors_of(v))
+        assert not inj.truncate_at  # the injected fault actually fired
+        # the dropped span blocks were re-read by the strict path
+        assert inj.n_calls >= 2
+
+
+def test_device_path_surfaces_exhausted_retries(tmp_path):
+    """A fault burst longer than the retry budget must surface loudly on
+    the device path (no silent truncation), and the engine must answer
+    correctly again afterwards."""
+    csr = rmat(7, 5, seed=2)
+    gp = str(tmp_path / "g.cbin")
+    paragrapher.save_graph(gp, csr, format="compbin")
+    with paragrapher.open_graph(gp, use_pgfuse=True, pgfuse_block_size=512,
+                                pgfuse_readahead=0, pgfuse_retries=1,
+                                pgfuse_retry_backoff_s=0.0) as g:
+        inj = FaultyStorage()
+        for k in (1, 2):  # first call and its only retry both fail
+            inj.fail_at[k] = OSError(errno.EIO, "dead OST")
+        inj.install_graph(g)
+        engine = NeighborQueryEngine(g, decode="device")
+        with pytest.raises(OSError):
+            engine.neighbors_batch([0, 1, 2])
+        got = engine.neighbors_batch([0, 1, 2])  # transient: next try works
+        for v, nbrs in zip([0, 1, 2], got):
+            assert np.array_equal(nbrs, csr.neighbors_of(v))
+
+
+@pytest.mark.parametrize("decode", ["host", "device"])
+def test_served_logits_match_in_memory_reference(tmp_path, decode):
+    """End-to-end differential: the server's logits — sample through the
+    engine (host OR device decode), gather from the column families,
+    one device_put, GCN forward — equal the in-memory reference bit for
+    bit on a zipf request stream."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_arch
+    from repro.launch.data_gnn import block_to_edges, ensure_gnn_assets
+    from repro.launch.serve import make_gnn_server
+    from repro.launch.steps import _GNN_MODULES
+    from repro.graph import NeighborSampler
+
+    cfg = get_arch("gcn-cora").make_reduced()
+    d_in = cfg.d_in
+    workdir = str(tmp_path)
+    answer, engine, close = make_gnn_server(
+        "gcn-cora", cfg, workdir, fanouts=(3, 2), seed=11, decode=decode)
+    try:
+        gp, _, _ = ensure_gnn_assets(workdir, d_in, cfg.n_classes)
+        csr = paragrapher.open_graph(gp).read_full()
+        x = synthesize_node_features(csr.n_vertices, d_in, seed=0)
+        ref_sampler = NeighborSampler(csr, (3, 2), seed=11)
+        mod = _GNN_MODULES["gcn-cora"]
+        params = mod.init_params(cfg, jax.random.key(0))
+        fwd = jax.jit(lambda p, b: mod.forward(p, b, cfg))
+        rng = np.random.default_rng(5)
+        n = csr.n_vertices
+        for _ in range(2):
+            hot = rng.integers(0, max(1, n // 16), 12)
+            cold = rng.integers(0, n, 12)
+            seeds = np.where(rng.random(12) < 0.5, hot, cold)
+            got = answer(seeds)
+            block = ref_sampler.sample(seeds)
+            src, dst, nn = block_to_edges(block)
+            nodes = np.concatenate(block.layer_nodes)
+            valid = np.concatenate(block.layer_valid)
+            xr = np.zeros((nn, d_in), np.float32)
+            xr[valid] = x[nodes[valid]]
+            ref = np.asarray(fwd(params, {
+                "x": jnp.asarray(xr),
+                "edge_src": jnp.asarray(src.astype(np.int32)),
+                "edge_dst": jnp.asarray(dst.astype(np.int32)),
+            })[:len(seeds)])
+            assert np.array_equal(got, ref), decode
+        if decode == "device":
+            assert engine.stats.device_batches == engine.stats.batches
+            assert engine.stats.bytes_h2d > 0
+    finally:
+        close()
