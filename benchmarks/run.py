@@ -95,6 +95,21 @@ def _suite_query(args) -> None:
               out=args.query_out)
 
 
+def _suite_traversal(args) -> None:
+    """Frontier-batched traversal service vs per-vertex naive BFS on a
+    zipf seed trace (+ a deterministic overload replay through the
+    admission gate) -> BENCH_traversal.json (virtual-clock p50/p99
+    gated downward, frontier-batching advantage gated upward)."""
+    from benchmarks import traversal
+
+    print("=" * 72)
+    print("Traversal — multi-hop service vs per-vertex BFS (emits BENCH json)")
+    print("=" * 72)
+    traversal.run(workdir=args.workdir, profile=args.profile,
+                  scale=13 if args.fast else 15,
+                  out=args.traversal_out)
+
+
 #: registered suites, executed in order by default — add new benchmark
 #: harnesses here so ``python -m benchmarks.run`` stays the one entry
 #: point that emits every artifact (CSV blocks and BENCH_*.json alike)
@@ -102,6 +117,7 @@ SUITES = {
     "figs": _suite_figs,
     "loading": _suite_loading,
     "query": _suite_query,
+    "traversal": _suite_traversal,
 }
 
 
@@ -120,6 +136,8 @@ def main() -> None:
                     help="where the loading suite writes its BENCH json")
     ap.add_argument("--query-out", default="BENCH_query.json",
                     help="where the query suite writes its BENCH json")
+    ap.add_argument("--traversal-out", default="BENCH_traversal.json",
+                    help="where the traversal suite writes its BENCH json")
     args = ap.parse_args()
 
     picked = [s.strip() for s in args.suites.split(",") if s.strip()]

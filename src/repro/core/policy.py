@@ -237,6 +237,63 @@ def choose_query_decode(n_edges: int, b: int, *,
                   f"packed bytes, VPU decode next to the gathers it feeds")
 
 
+@dataclasses.dataclass
+class AdmissionPlan:
+    """Load-shedding gate sizing for the traversal/serving layer.
+
+    The gate admits at most ``max_inflight`` requests (being served OR
+    queued) and at most ``max_edges_inflight`` of summed per-request
+    edge budgets at any instant; everything beyond is SHED immediately
+    (fast-fail, so overload surfaces as an explicit signal the client
+    can back off on, never as unbounded queueing delay).  ``servers``
+    is the number of requests the service executes concurrently —
+    the quantity the queue-depth arithmetic below divides by.
+    """
+
+    max_inflight: int         # admitted (served + queued) request cap
+    max_edges_inflight: int   # summed admitted edge budgets cap
+    servers: int              # concurrent executors behind the gate
+    slo_s: float              # the latency objective the sizing protects
+    reason: str
+
+
+def choose_admission(slo_s: float, *, edge_budget: int,
+                     service_edges_per_s: float, servers: int = 1,
+                     overshoot_factor: float = 2.0) -> AdmissionPlan:
+    """Size the admission gate so every ADMITTED request meets the SLO.
+
+    Classic bounded-queue arithmetic: one request costs at most
+    ``t_req = overshoot_factor * edge_budget / service_edges_per_s``
+    (the traversal loop stops at the first frontier that crosses the
+    edge budget, so a request can overshoot its budget by up to one
+    frontier — ``overshoot_factor`` covers that).  A request admitted
+    behind ``q`` others waits at most ``ceil(q / servers) * t_req``
+    before its own ``t_req`` of service, so admitting at most
+
+        max_inflight = floor(slo_s * servers / t_req)
+
+    keeps worst-case admitted latency inside ``slo_s``.  Shedding is
+    then the ONLY overload response: p99 of admitted requests is a
+    sizing invariant, and the shed rate — not the tail — absorbs the
+    excess (the deterministic load test pins exactly this).
+    """
+    if slo_s <= 0 or edge_budget < 1 or service_edges_per_s <= 0:
+        raise ValueError("slo_s, edge_budget and service_edges_per_s must "
+                         "be positive")
+    if servers < 1 or overshoot_factor < 1:
+        raise ValueError("servers must be >= 1 and overshoot_factor >= 1")
+    t_req = overshoot_factor * edge_budget / service_edges_per_s
+    max_inflight = max(1, int(slo_s * servers / t_req))
+    return AdmissionPlan(
+        max_inflight=max_inflight,
+        max_edges_inflight=max_inflight * edge_budget,
+        servers=servers, slo_s=slo_s,
+        reason=f"worst-case request {t_req * 1e3:.2f} ms "
+               f"({overshoot_factor}x overshoot on {edge_budget} edges); "
+               f"{max_inflight} in flight across {servers} server(s) keeps "
+               f"admitted latency <= {slo_s * 1e3:.1f} ms; excess sheds")
+
+
 def choose_stream_parts(n_devices_total: int = 1, process_count: int = 1,
                         min_parts_per_process: int = 8) -> int:
     """Global partition count for a (possibly multi-host) streamed load.

@@ -1,9 +1,12 @@
-"""Serving driver: batched LM decode, DIN CTR scoring, or online GNN
-inference over the random-access graph query engine (CPU-scale).
+"""Serving driver: batched LM decode, DIN CTR scoring, online GNN
+inference, or multi-hop graph traversals over the random-access graph
+query engine (CPU-scale).
 
     python -m repro.launch.serve --arch smollm-360m --reduced --tokens 32
     python -m repro.launch.serve --arch din --reduced --requests 4
     python -m repro.launch.serve --arch gcn-cora --reduced --requests 8
+    python -m repro.launch.serve --arch gcn-cora --reduced --traversal \\
+        --requests 32
 """
 
 from __future__ import annotations
@@ -166,6 +169,92 @@ def make_gnn_server(arch_id: str, cfg, workdir: str, *,
     return answer, engine, close
 
 
+def make_traversal_server(workdir: str, *, decode: str = "auto",
+                          slo_s: float = 0.5,
+                          edge_budget: int = 1 << 16,
+                          service_edges_per_s: float = 5.0e6,
+                          servers: int = 2, seed: int = 1):
+    """The traversal request type next to GNN inference: a
+    :class:`repro.query.TraversalService` over the SAME CompBin bytes
+    (and the same random-access PG-Fuse policy) the inference server
+    reads.  Returns ``(service, close)``; answer requests with
+    ``service.khop(...)`` / ``service.bfs_visit(...)`` /
+    ``service.shortest_path(...)`` or ``service.submit(request)``.
+
+    The admission gate is sized by
+    :func:`repro.core.policy.choose_admission` from the latency SLO
+    and the per-request edge budget — overload sheds immediately
+    (:class:`repro.query.TraversalShed`) instead of queueing into SLO
+    violations.
+    """
+    from repro.core import paragrapher, policy
+    from repro.launch.data_gnn import ensure_gnn_assets
+    from repro.query import NeighborQueryEngine, TraversalService
+
+    block_size = 1 << 16
+    gp, _, _ = ensure_gnn_assets(workdir, 16, 7, block_size=block_size,
+                                 seed=seed)
+    amode = policy.choose_access_mode("serve")
+    g = paragrapher.open_graph(
+        gp, use_pgfuse=True, pgfuse_block_size=block_size,
+        pgfuse_readahead=amode.readahead, pgfuse_eviction=amode.eviction,
+        pgfuse_max_resident_bytes=256 * block_size)
+    engine = NeighborQueryEngine(g, decode=decode)
+    plan = policy.choose_admission(
+        slo_s, edge_budget=edge_budget,
+        service_edges_per_s=service_edges_per_s, servers=servers)
+    service = TraversalService(engine, admission=plan,
+                               default_max_edges=edge_budget)
+
+    def close() -> None:
+        service.close()
+        engine.close()
+        g.close()
+
+    return service, close
+
+
+def serve_traversal(*, n_requests: int, batch: int, workdir: str) -> None:
+    """Synthetic zipf traversal traffic against
+    :func:`make_traversal_server`: k-hop neighborhoods, bounded BFS
+    visits and shortest paths over hub-biased seeds."""
+    from repro.query import TraversalShed
+
+    service, close = make_traversal_server(workdir)
+    try:
+        n = service.n_vertices
+        rng = np.random.default_rng(0)
+        t0 = time.perf_counter()
+        shed = 0
+        for i in range(n_requests):
+            hot = rng.integers(0, max(1, n // 16), batch)
+            cold = rng.integers(0, n, batch)
+            seeds = np.where(rng.random(batch) < 0.5, hot, cold)
+            try:
+                if i % 3 == 0:
+                    service.khop(seeds, k=2)
+                elif i % 3 == 1:
+                    service.bfs_visit(seeds[:1], max_vertices=4 * batch)
+                else:
+                    service.shortest_path(int(seeds[0]), int(seeds[1]))
+            except TraversalShed:
+                shed += 1
+        wall = time.perf_counter() - t0
+        st = service.stats
+        qs = service.engine.stats
+        log.info("traversal serve: %d reqs in %.2fs (%.0f req/s); "
+                 "p50 %.3f ms p99 %.3f ms, shed %d (%.1f%%); "
+                 "%d frontier batches, %d edges scanned, "
+                 "engine dedup %.2fx, %d/%d device batches",
+                 st.completed, wall, st.completed / max(wall, 1e-9),
+                 st.p50_s * 1e3, st.p99_s * 1e3, shed,
+                 100 * st.shed_rate, st.frontier_batches,
+                 st.edges_scanned, qs.dedup_ratio, qs.device_batches,
+                 qs.batches)
+    finally:
+        close()
+
+
 def serve_gnn(arch_id: str, cfg, *, batch: int, n_requests: int,
               workdir: str) -> None:
     """Synthetic user-inference traffic against :func:`make_gnn_server`.
@@ -216,10 +305,21 @@ def main() -> None:
     ap.add_argument("--tokens", type=int, default=16)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--workdir", default="/tmp/repro_serve")
+    ap.add_argument("--traversal", action="store_true",
+                    help="serve multi-hop traversal requests (k-hop / "
+                         "BFS visit / shortest path) over the graph "
+                         "assets instead of model inference")
     args = ap.parse_args()
 
     spec = get_arch(args.arch)
     cfg = spec.make_reduced() if args.reduced else spec.make_config()
+    if args.traversal:
+        if spec.family != "gnn":
+            raise SystemExit("--traversal serves graph requests; pick a "
+                             "gnn arch for its graph assets")
+        serve_traversal(n_requests=args.requests, batch=args.batch,
+                        workdir=args.workdir)
+        return
     if spec.family == "lm":
         serve_lm(cfg, batch=args.batch, prompt_len=args.prompt_len,
                  n_tokens=args.tokens)

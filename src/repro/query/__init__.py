@@ -1,4 +1,11 @@
 from repro.query.engine import (DECODE_MODES,  # noqa: F401
                                 NeighborQueryEngine, QueryFuture, QueryStats,
                                 gather_rows)
+from repro.query.loadgen import (LoadGenerator, LoadReport,  # noqa: F401
+                                 default_cost_fn)
+from repro.query.traversal import (TRAVERSAL_KINDS,  # noqa: F401
+                                   AdmissionGate, TraversalError,
+                                   TraversalRequest, TraversalResult,
+                                   TraversalService, TraversalShed,
+                                   TraversalStats)
 from repro.query.window import CLOSE_REASONS, AdaptiveWindow  # noqa: F401

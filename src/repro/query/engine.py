@@ -106,9 +106,20 @@ class QueryStats:
     device_batches: int = 0    # micro-batches decoded on device
     bytes_h2d: int = 0         # packed bytes shipped for device decode
     # why each executed batch closed ("full"/"plateau"/"timeout"/"flush"/
-    # "direct"); invariant: sum(close_reasons.values()) == batches
+    # "direct"); invariant: sum(close_reasons.values()) == batches —
+    # held at EVERY instant, including snapshots taken concurrently
+    # with in-flight batches, because every mutation (the engine's
+    # per-batch fold, reset) runs under this object's _lock
     close_reasons: dict = dataclasses.field(default_factory=dict)
     latencies_s: list = dataclasses.field(default_factory=list)
+
+    def __post_init__(self) -> None:
+        # the stats object OWNS its lock (an attribute, not a field, so
+        # asdict()/replace() never touch it): the engine folds each
+        # batch under it, and reset()/as_dict() take the SAME lock —
+        # a reset interleaving a fold mid-batch used to tear the
+        # close_reasons/batches invariant
+        self._lock = threading.Lock()
 
     @property
     def dedup_ratio(self) -> float:
@@ -117,9 +128,11 @@ class QueryStats:
             if self.unique_vertices else 0.0
 
     def latency_quantile(self, q: float) -> float:
-        if not self.latencies_s:
+        with self._lock:
+            lat = list(self.latencies_s)
+        if not lat:
             return 0.0
-        return float(np.quantile(np.asarray(self.latencies_s), q))
+        return float(np.quantile(np.asarray(lat), q))
 
     @property
     def p50_s(self) -> float:
@@ -130,24 +143,36 @@ class QueryStats:
         return self.latency_quantile(0.99)
 
     def as_dict(self) -> dict:
-        d = dataclasses.asdict(self)
+        with self._lock:
+            d = dataclasses.asdict(self)
         n = d.pop("latencies_s")
         d["n_latencies"] = len(n)
-        d["dedup_ratio"] = self.dedup_ratio
-        d["p50_s"] = self.p50_s
-        d["p99_s"] = self.p99_s
+        d["dedup_ratio"] = (d["requests"] / d["unique_vertices"]
+                            if d["unique_vertices"] else 0.0)
+        lat = np.asarray(n) if n else None
+        d["p50_s"] = float(np.quantile(lat, 0.50)) if n else 0.0
+        d["p99_s"] = float(np.quantile(lat, 0.99)) if n else 0.0
         return d
 
     def reset(self) -> "QueryStats":
-        """Zero in place; returns the pre-reset snapshot."""
-        snap = dataclasses.replace(self,
-                                   latencies_s=list(self.latencies_s),
-                                   close_reasons=dict(self.close_reasons))
-        for f in dataclasses.fields(self):
-            cur = getattr(self, f.name)
-            setattr(self, f.name,
-                    [] if isinstance(cur, list)
-                    else {} if isinstance(cur, dict) else 0)
+        """Zero in place ATOMICALLY; returns the pre-reset snapshot.
+
+        Runs under the stats lock, so concurrent in-flight batches
+        land wholly before or wholly after the cut: the snapshot and
+        the zeroed object BOTH satisfy
+        ``sum(close_reasons.values()) == batches``, and no batch is
+        lost across the reset (the regression suite hammers exactly
+        this interleaving).
+        """
+        with self._lock:
+            snap = dataclasses.replace(
+                self, latencies_s=list(self.latencies_s),
+                close_reasons=dict(self.close_reasons))
+            for f in dataclasses.fields(self):
+                cur = getattr(self, f.name)
+                setattr(self, f.name,
+                        [] if isinstance(cur, list)
+                        else {} if isinstance(cur, dict) else 0)
         return snap
 
 
@@ -238,7 +263,9 @@ class NeighborQueryEngine:
         self.merge_gap = (int(merge_gap) if merge_gap is not None
                           else self._block_size)
         self.stats = QueryStats()
-        self._stats_lock = threading.Lock()
+        # per-batch folds share the stats object's OWN lock, so an
+        # external stats.reset()/as_dict() is atomic against them
+        self._stats_lock = self.stats._lock
         # async micro-batching state: _have_work wakes the idle worker
         # (it blocks indefinitely between requests — no polling);
         # _full short-circuits the batching window when max_batch ids

@@ -1,0 +1,254 @@
+"""Property-based differential for the traversal service.
+
+An independent pure in-memory CSR reference (dict/set BFS below — no
+engine, no numpy vectorization tricks) re-implements the documented
+traversal semantics, and the service must reproduce EVERY result field
+bit for bit over arbitrary `_prop.Draw` graphs: cycles, self-loops,
+duplicate seeds, isolated vertices, out-of-range seeds, ``k=0``, tight
+edge/vertex budgets — host and device decode arms alike.
+"""
+
+import os
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro.core import paragrapher
+from repro.graph import rmat
+from repro.query import (NeighborQueryEngine, TraversalError,
+                         TraversalService)
+from tests._prop import Draw, prop
+
+
+def ref_traverse(csr, kind, seeds, *, k=None, target=None,
+                 max_edges=1 << 20, max_vertices=None):
+    """The in-memory reference: plain python sets/dicts, hop by hop,
+    following the pinned semantics (stop-condition order, budget
+    overshoot-then-stop, ascending-id trimming, smallest-adjacent-
+    frontier-vertex parents) to the letter."""
+    n = csr.n_vertices
+    seeds = sorted({int(s) for s in np.asarray(seeds).ravel()})
+    mv = max_vertices if max_vertices is not None else n
+    truncated = False
+    if len(seeds) > mv:
+        seeds = seeds[:mv]
+        truncated = True
+    visited = {s: 0 for s in seeds}
+    order, depths = list(seeds), [0] * len(seeds)
+    parent = {}
+    frontier = seeds
+    found = target is not None and target in visited
+    edges = hops = 0
+    while True:
+        if found or not frontier:
+            break
+        if k is not None and hops == k:
+            break
+        if edges > max_edges:
+            truncated = True
+            break
+        if len(visited) >= mv:
+            truncated = True
+            break
+        flat = [int(u) for v in frontier for u in csr.neighbors_of(v)]
+        hops += 1
+        edges += len(flat)
+        new = sorted({u for u in flat if u not in visited})
+        keep = mv - len(visited)
+        if len(new) > keep:
+            new = new[:keep]
+            truncated = True
+        if target is not None:
+            for u in new:
+                parent[u] = min(v for v in frontier
+                                if u in set(int(x) for x in
+                                            csr.neighbors_of(v)))
+            if target in new:
+                found = True
+        for u in new:
+            visited[u] = hops
+        order.extend(new)
+        depths.extend([hops] * len(new))
+        frontier = new
+    path = None
+    if kind == "path" and found:
+        chain = [target]
+        while chain[-1] in parent:
+            chain.append(parent[chain[-1]])
+        path = chain[::-1]
+    return {"vertices": order, "depths": depths, "found": found,
+            "path": path, "truncated": truncated, "hops": hops,
+            "edges_scanned": edges}
+
+
+def _assert_matches(res, ref, ctx=""):
+    assert res.vertices.tolist() == ref["vertices"], ctx
+    assert res.depths.tolist() == ref["depths"], ctx
+    assert res.truncated == ref["truncated"], ctx
+    assert res.hops == ref["hops"], ctx
+    assert res.edges_scanned == ref["edges_scanned"], ctx
+    assert res.found == ref["found"], ctx
+    if ref["path"] is None:
+        assert res.path is None, ctx
+    else:
+        assert res.path.tolist() == ref["path"], ctx
+
+
+def _service(path, draw_or_none, decode="host", **kw):
+    g = paragrapher.open_graph(
+        path, use_pgfuse=True,
+        pgfuse_block_size=(draw_or_none.choice([512, 1 << 12])
+                           if draw_or_none else 512),
+        pgfuse_readahead=0, pgfuse_eviction="clock")
+    engine = NeighborQueryEngine(g, decode=decode)
+    return TraversalService(engine, **kw), engine, g
+
+
+@prop(10)
+def test_khop_and_bfs_match_csr_reference(draw: Draw):
+    """Arbitrary graphs (cycles/self-loops/isolated vertices), arbitrary
+    duplicate-heavy seed batches, k=0 upward, tight budgets: k-hop and
+    bounded-BFS results are identical to the pure reference."""
+    csr = draw.csr(max_edges=1500)
+    if csr.n_vertices == 0:
+        return
+    with tempfile.TemporaryDirectory() as d:
+        gp = os.path.join(d, "g.cbin")
+        paragrapher.save_graph(gp, csr, format="compbin")
+        svc, engine, g = _service(gp, draw)
+        try:
+            for _ in range(4):
+                seeds = draw.vertex_batch(csr.n_vertices, max_size=24)
+                if seeds.size == 0:
+                    continue
+                k = draw.int(0, 4)
+                max_edges = draw.choice(
+                    [1 << 20, draw.int(0, max(1, csr.n_edges))])
+                max_vertices = (None if draw.bool() else
+                                draw.int(1, max(1, csr.n_vertices)))
+                res = svc.khop(seeds, k, max_edges=max_edges,
+                               max_vertices=max_vertices)
+                ref = ref_traverse(csr, "khop", seeds, k=k,
+                                   max_edges=max_edges,
+                                   max_vertices=max_vertices)
+                _assert_matches(res, ref, ("khop", k, max_edges))
+                res = svc.bfs_visit(seeds, max_edges=max_edges,
+                                    max_vertices=max_vertices)
+                ref = ref_traverse(csr, "bfs", seeds,
+                                   max_edges=max_edges,
+                                   max_vertices=max_vertices)
+                _assert_matches(res, ref, ("bfs", max_edges, max_vertices))
+            # the frontier loop really batched: engine batches == hops
+            # (each hop is exactly ONE neighbors_batch call)
+            assert engine.stats.batches == svc.stats.frontier_batches
+        finally:
+            svc.close(), engine.close(), g.close()
+
+
+@prop(10)
+def test_shortest_path_matches_csr_reference(draw: Draw):
+    """BFS shortest paths — including unreachable targets, source ==
+    target, self-loops and budget-limited searches — agree with the
+    reference on found/path/distance exactly (deterministic parents)."""
+    csr = draw.csr(max_edges=1200)
+    if csr.n_vertices == 0:
+        return
+    with tempfile.TemporaryDirectory() as d:
+        gp = os.path.join(d, "g.cbin")
+        paragrapher.save_graph(gp, csr, format="compbin")
+        svc, engine, g = _service(gp, draw)
+        try:
+            for _ in range(4):
+                src = draw.int(0, csr.n_vertices - 1)
+                dst = src if draw.bool() and draw.bool() else \
+                    draw.int(0, csr.n_vertices - 1)
+                max_edges = draw.choice(
+                    [1 << 20, draw.int(0, max(1, csr.n_edges))])
+                max_depth = None if draw.bool() else draw.int(0, 3)
+                res = svc.shortest_path(src, dst, max_edges=max_edges,
+                                        max_depth=max_depth)
+                ref = ref_traverse(csr, "path", [src], k=max_depth,
+                                   target=dst, max_edges=max_edges)
+                _assert_matches(res, ref, (src, dst, max_edges))
+                if res.found:
+                    # the path is a real path of the claimed length
+                    assert res.path[0] == src and res.path[-1] == dst
+                    for a, b in zip(res.path[:-1], res.path[1:]):
+                        assert int(b) in csr.neighbors_of(int(a)).tolist()
+        finally:
+            svc.close(), engine.close(), g.close()
+
+
+@prop(5)
+def test_device_decode_arm_matches_host_and_reference(draw: Draw):
+    """The device-decode arm (merged packed runs through the Pallas
+    kernel) answers every traversal identically to the host arm AND the
+    reference — the differential covers the whole service stack."""
+    csr = draw.csr(max_edges=1500)
+    if csr.n_vertices == 0:
+        return
+    with tempfile.TemporaryDirectory() as d:
+        gp = os.path.join(d, "g.cbin")
+        paragrapher.save_graph(gp, csr, format="compbin")
+        svc_h, eng_h, g_h = _service(gp, draw, decode="host")
+        svc_d, eng_d, g_d = _service(gp, None, decode="device")
+        try:
+            for _ in range(3):
+                seeds = draw.vertex_batch(csr.n_vertices, max_size=16)
+                if seeds.size == 0:
+                    continue
+                k = draw.int(0, 3)
+                ref = ref_traverse(csr, "khop", seeds, k=k)
+                _assert_matches(svc_h.khop(seeds, k), ref, "host")
+                _assert_matches(svc_d.khop(seeds, k), ref, "device")
+            # the device service really decoded on the kernel whenever
+            # it had edges to decode
+            assert eng_d.stats.device_batches == eng_d.stats.batches
+        finally:
+            svc_h.close(), eng_h.close(), g_h.close()
+            svc_d.close(), eng_d.close(), g_d.close()
+
+
+def test_bad_seeds_are_clean_per_request_errors(tmp_path):
+    """Out-of-range / empty seeds (and a bad path target) surface as
+    TraversalError; the service keeps answering, the gate leaks no
+    tokens, and the failure is accounted (conservation holds)."""
+    csr = rmat(7, 5, seed=9)
+    gp = str(tmp_path / "g.cbin")
+    paragrapher.save_graph(gp, csr, format="compbin")
+    svc, engine, g = _service(gp, None)
+    try:
+        n = csr.n_vertices
+        for bad in ([n], [-1], [0, n + 7], []):
+            with pytest.raises(TraversalError):
+                svc.khop(bad, k=1)
+        with pytest.raises(TraversalError):
+            svc.shortest_path(0, n)
+        assert svc.gate.inflight == 0 and svc.gate.edges_inflight == 0
+        # still serving, and correctly
+        ref = ref_traverse(csr, "khop", [0, 1], k=2)
+        _assert_matches(svc.khop([0, 1], 2), ref)
+        st = svc.stats
+        assert st.failed == 5 and st.completed == 1
+        assert st.conserved
+    finally:
+        svc.close(), engine.close(), g.close()
+
+
+def test_k0_and_duplicate_seeds(tmp_path):
+    """k=0 returns exactly the deduplicated sorted seeds at depth 0 and
+    scans zero edges — on both decode arms."""
+    csr = rmat(6, 4, seed=1)
+    gp = str(tmp_path / "g.cbin")
+    paragrapher.save_graph(gp, csr, format="compbin")
+    for decode in ("host", "device"):
+        svc, engine, g = _service(gp, None, decode=decode)
+        try:
+            res = svc.khop([5, 3, 5, 5, 3], k=0)
+            assert res.vertices.tolist() == [3, 5]
+            assert res.depths.tolist() == [0, 0]
+            assert res.edges_scanned == 0 and res.hops == 0
+            assert not res.truncated
+        finally:
+            svc.close(), engine.close(), g.close()

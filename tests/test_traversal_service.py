@@ -1,0 +1,287 @@
+"""Fault injection + concurrent-accounting lockdown for the traversal
+service.
+
+Storage faults (``FaultyStorage``: transient EIO, short reads, latency)
+injected mid-frontier must either retry transparently
+(``retried_reads`` asserted) or surface as a clean per-request error —
+gate tokens returned, sibling in-flight traversals byte-identical to a
+fault-free run, conservation invariants intact.
+
+Also pins the engine's ``QueryStats.reset()`` atomicity under
+concurrent batches (the regression found by this PR's audit: ``reset``
+used to mutate fields outside the fold lock, so a snapshot taken while
+a batch folded could tear ``sum(close_reasons) == batches``).
+"""
+
+import errno
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import paragrapher
+from repro.core.policy import choose_admission
+from repro.graph import rmat
+from repro.query import NeighborQueryEngine, TraversalService
+from tests.conftest import FaultyStorage
+
+BLOCK = 512
+
+
+def _open(path, **kw):
+    kw.setdefault("pgfuse_retry_backoff_s", 0.0)
+    g = paragrapher.open_graph(path, use_pgfuse=True,
+                               pgfuse_block_size=BLOCK,
+                               pgfuse_readahead=0,
+                               pgfuse_eviction="clock", **kw)
+    engine = NeighborQueryEngine(g, decode="host")
+    return TraversalService(engine), engine, g
+
+
+@pytest.fixture
+def graph_file(tmp_path):
+    csr = rmat(9, 7, seed=42)
+    gp = str(tmp_path / "g.cbin")
+    paragrapher.save_graph(gp, csr, format="compbin")
+    return gp
+
+
+def _clean_result(graph_file, *seed_batches, k=3):
+    """Reference answers from a fault-free service on the same file."""
+    svc, engine, g = _open(graph_file)
+    try:
+        return [svc.khop(s, k) for s in seed_batches]
+    finally:
+        svc.close(), engine.close(), g.close()
+
+
+def _same(a, b):
+    assert a.vertices.tolist() == b.vertices.tolist()
+    assert a.depths.tolist() == b.depths.tolist()
+    assert (a.hops, a.edges_scanned, a.truncated) \
+        == (b.hops, b.edges_scanned, b.truncated)
+
+
+def test_transient_eio_mid_frontier_retries_transparently(graph_file):
+    """EIO on the FIRST storage call and again mid-traversal: with
+    retries enabled the request never notices — the answer is
+    byte-identical to a fault-free run and ``retried_reads`` counts
+    exactly the two trips back to storage."""
+    # count the fault-free underlying calls to place a fault mid-way
+    svc, engine, g = _open(graph_file)
+    probe = FaultyStorage().install_graph(g)
+    [ref] = [svc.khop([3, 71], 3)]
+    n_calls = probe.n_calls
+    svc.close(), engine.close(), g.close()
+    assert n_calls >= 3, "traversal must take several storage reads"
+
+    svc, engine, g = _open(graph_file, pgfuse_retries=2)
+    fs = FaultyStorage()
+    fs.fail_at[1] = OSError(errno.EIO, "flaky OST")
+    # the fault-free run took n_calls reads; +1 because the first retry
+    # adds one extra underlying call before the midpoint
+    fs.fail_at[n_calls // 2 + 1] = OSError(errno.EIO, "flaky OST")
+    fs.install_graph(g)
+    try:
+        res = svc.khop([3, 71], 3)
+        _same(res, ref)
+        assert g.pgfuse_stats().retried_reads == 2
+        st = svc.stats
+        assert st.completed == 1 and st.failed == 0 and st.conserved
+    finally:
+        svc.close(), engine.close(), g.close()
+
+
+def test_exhausted_retry_fails_cleanly_and_short_read_heals(graph_file):
+    """With no retry budget an EIO surfaces as a clean per-request
+    error (gate tokens come back, the failure is accounted).  A SHORT
+    read on the next request's span prefetch is healed structurally —
+    the truncated block is dropped, never installed, and re-read — so
+    the request still gets the fault-free answer."""
+    [ref] = _clean_result(graph_file, [5, 200])
+    svc, engine, g = _open(graph_file)  # pgfuse_retries=0
+    fs = FaultyStorage()
+    fs.fail_at[1] = OSError(errno.EIO, "flaky OST")
+    fs.install_graph(g)
+    try:
+        with pytest.raises(OSError):
+            svc.khop([5, 200], 3)
+        assert svc.gate.inflight == 0 and svc.gate.edges_inflight == 0
+        # a truncated span-prefetch read must never hand short bytes to
+        # the decoder: the block reverts to NOT_LOADED and reloads
+        fs.truncate_at[fs.n_calls + 1] = 7
+        _same(svc.khop([5, 200], 3), ref)
+        assert any(returned == 7 for _, _, _, returned in fs.calls), \
+            "the short read never fired"
+        assert svc.gate.inflight == 0 and svc.gate.edges_inflight == 0
+        st = svc.stats
+        assert st.failed == 1 and st.completed == 1 and st.conserved
+    finally:
+        svc.close(), engine.close(), g.close()
+
+
+def test_failed_request_leaves_sibling_inflight_intact(graph_file):
+    """Request A is admitted and in flight when request B dies on a
+    storage fault: B's failure releases only B's tokens, and A — run
+    over the very cache the fault touched — still answers
+    byte-identically to the fault-free reference."""
+    ref_a, ref_b = _clean_result(graph_file, [9, 130], [77, 300])
+    plan = choose_admission(0.5, edge_budget=1 << 16,
+                            service_edges_per_s=5e6, servers=2)
+    svc, engine, g = _open(graph_file)
+    svc.gate.plan = plan
+    fs = FaultyStorage()
+    fs.install_graph(g)
+    try:
+        from repro.query import TraversalRequest
+        req_a = TraversalRequest("khop", [9, 130], k=3,
+                                 max_edges=1 << 16)
+        req_b = TraversalRequest("khop", [77, 300], k=3,
+                                 max_edges=1 << 16)
+        assert svc.admit(req_a) and svc.admit(req_b)
+        assert svc.gate.inflight == 2
+        fs.fail_at[fs.n_calls + 1] = OSError(errno.EIO, "flaky OST")
+        with pytest.raises(OSError):
+            svc.perform(req_b)           # fails cleanly, releases B only
+        assert svc.gate.inflight == 1
+        assert svc.stats.failed == 1 and svc.stats.inflight == 1
+        res_a = svc.perform(req_a)       # the sibling is untouched
+        svc.complete(req_a, 0.0)
+        _same(res_a, ref_a)
+        _same(svc.khop([77, 300], 3), ref_b)   # B's retry succeeds
+        st = svc.stats
+        assert st.conserved and st.inflight == 0
+        assert svc.gate.inflight == 0 and svc.gate.edges_inflight == 0
+    finally:
+        svc.close(), engine.close(), g.close()
+
+
+def test_concurrent_submits_survive_fault_burst(graph_file):
+    """Six concurrent ``submit()`` traversals through a burst of
+    transient EIOs with one retry each: every request either completes
+    with the fault-free answer or fails with a clean OSError; the
+    counters conserve and the gate fully drains."""
+    batches = [[i * 17 % 500, i * 53 % 500] for i in range(6)]
+    refs = _clean_result(graph_file, *batches)
+    svc, engine, g = _open(graph_file, pgfuse_retries=1)
+    fs = FaultyStorage()
+    fs.install_graph(g)
+    try:
+        from repro.query import TraversalRequest
+        for i in range(1, 5):            # 4 consecutive flaky calls
+            fs.fail_at[i] = OSError(errno.EIO, "flaky OST")
+        futures = [svc.submit(TraversalRequest("khop", b, k=3))
+                   for b in batches]
+        ok, bad = 0, 0
+        for fut, ref in zip(futures, refs):
+            try:
+                _same(fut.result(timeout=30), ref)
+                ok += 1
+            except OSError:
+                bad += 1
+        st = svc.stats
+        assert ok + bad == 6 == st.admitted
+        assert st.completed == ok and st.failed == bad
+        assert st.conserved and st.inflight == 0
+        assert svc.gate.inflight == 0 and svc.gate.edges_inflight == 0
+        assert g.pgfuse_stats().retried_reads >= 1
+        for b, ref in zip(batches, refs):    # full recovery
+            _same(svc.khop(b, 3), ref)
+    finally:
+        svc.close(), engine.close(), g.close()
+
+
+def test_latency_injection_only_slows_never_corrupts(graph_file):
+    """A per-request storage latency floor mid-frontier changes
+    timings, never answers: results stay byte-identical and nothing is
+    retried or failed."""
+    [ref] = _clean_result(graph_file, [0, 1, 2])
+    svc, engine, g = _open(graph_file)
+    FaultyStorage(latency_s=1e-4).install_graph(g)
+    try:
+        _same(svc.khop([0, 1, 2], 3), ref)
+        assert g.pgfuse_stats().retried_reads == 0
+        st = svc.stats
+        assert st.completed == 1 and st.failed == 0 and st.conserved
+    finally:
+        svc.close(), engine.close(), g.close()
+
+
+# -- QueryStats.reset() / close_reasons under concurrency (regression) ----
+
+def test_querystats_reset_atomic_under_concurrent_batches(graph_file):
+    """Hammer ``neighbors_batch`` from worker threads while the main
+    thread snapshots via ``reset()`` and ``as_dict()``: every snapshot
+    must satisfy ``sum(close_reasons) == batches`` (the invariant used
+    to tear when ``reset`` mutated outside the fold lock), and no batch
+    may be lost or double-counted across the epoch cuts."""
+    g = paragrapher.open_graph(graph_file, use_pgfuse=True,
+                               pgfuse_block_size=BLOCK,
+                               pgfuse_readahead=0,
+                               pgfuse_eviction="clock")
+    engine = NeighborQueryEngine(g, decode="host")
+    n_threads, per_thread = 4, 60
+    start = threading.Event()
+    errors: list = []
+
+    def worker(tid):
+        rng = np.random.default_rng(tid)
+        start.wait()
+        for _ in range(per_thread):
+            v = rng.integers(0, engine.n_vertices, 8)
+            engine.neighbors_batch(v.tolist())
+
+    threads = [threading.Thread(target=worker, args=(t,))
+               for t in range(n_threads)]
+    try:
+        for t in threads:
+            t.start()
+        start.set()
+        snapshots = []
+        while any(t.is_alive() for t in threads):
+            live = engine.stats.as_dict()
+            if sum(live["close_reasons"].values()) != live["batches"]:
+                errors.append(("as_dict tear", live))
+            snapshots.append(engine.stats.reset())
+        for t in threads:
+            t.join()
+        snapshots.append(engine.stats.reset())
+        assert not errors, errors[0]
+        total_batches = 0
+        for snap in snapshots:
+            # the invariant holds on EVERY epoch cut, not just quiescent
+            assert sum(snap.close_reasons.values()) == snap.batches, \
+                (snap.batches, snap.close_reasons)
+            assert len(snap.latencies_s) <= snap.batches
+            total_batches += snap.batches
+        total_batches += engine.stats.batches
+        assert total_batches == n_threads * per_thread
+    finally:
+        engine.close(), g.close()
+
+
+def test_traversalstats_reset_carries_inflight(graph_file):
+    """``TraversalStats.reset()`` with requests still in flight: the
+    snapshot absorbs only finished history, the live object keeps the
+    outstanding requests, and conservation holds on BOTH sides — before
+    and after those requests complete."""
+    from repro.query import TraversalRequest
+
+    svc, engine, g = _open(graph_file)
+    try:
+        svc.khop([1, 2], 1)                       # finished history
+        req = TraversalRequest("khop", [3], k=1)
+        assert svc.admit(req)                     # in flight across the cut
+        snap = svc.stats.reset()
+        assert snap.submitted == 1 and snap.completed == 1
+        assert snap.inflight == 0 and snap.conserved
+        live = svc.stats
+        assert live.inflight == 1 and live.admitted == 1 \
+            and live.submitted == 1 and live.conserved
+        svc.perform(req)
+        svc.complete(req, 0.001)
+        assert live.completed == 1 and live.inflight == 0
+        assert live.conserved
+        assert svc.gate.inflight == 0
+    finally:
+        svc.close(), engine.close(), g.close()
