@@ -110,6 +110,21 @@ def _suite_traversal(args) -> None:
                   out=args.traversal_out)
 
 
+def _suite_sharded(args) -> None:
+    """1/2/4-shard scatter-gather deployments replaying the same zipf
+    hub trace on per-shard simulated storage -> BENCH_sharded.json
+    (2-shard aggregate-makespan advantage gated upward with a hard
+    >=1.5x floor, 2-shard virtual-clock p50/p99 gated downward)."""
+    from benchmarks import sharded
+
+    print("=" * 72)
+    print("Sharded — scatter-gather scale-out 1/2/4 shards (emits BENCH json)")
+    print("=" * 72)
+    sharded.run(workdir=args.workdir, profile=args.profile,
+                scale=13 if args.fast else 15,
+                out=args.sharded_out)
+
+
 #: registered suites, executed in order by default — add new benchmark
 #: harnesses here so ``python -m benchmarks.run`` stays the one entry
 #: point that emits every artifact (CSV blocks and BENCH_*.json alike)
@@ -118,6 +133,7 @@ SUITES = {
     "loading": _suite_loading,
     "query": _suite_query,
     "traversal": _suite_traversal,
+    "sharded": _suite_sharded,
 }
 
 
@@ -138,6 +154,8 @@ def main() -> None:
                     help="where the query suite writes its BENCH json")
     ap.add_argument("--traversal-out", default="BENCH_traversal.json",
                     help="where the traversal suite writes its BENCH json")
+    ap.add_argument("--sharded-out", default="BENCH_sharded.json",
+                    help="where the sharded suite writes its BENCH json")
     args = ap.parse_args()
 
     picked = [s.strip() for s in args.suites.split(",") if s.strip()]

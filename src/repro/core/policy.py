@@ -294,6 +294,87 @@ def choose_admission(slo_s: float, *, edge_budget: int,
                f"admitted latency <= {slo_s * 1e3:.1f} ms; excess sheds")
 
 
+@dataclasses.dataclass
+class ShardPlan:
+    """Scale-out layout for the sharded serving path
+    (:class:`repro.query.sharded.ShardedQueryService`).
+
+    ``n_shards`` contiguous vertex-range shards, each replicated
+    ``replication`` times (every replica owns its own PG-Fuse mount and
+    engine, simulated-process style).  ``routing`` is how a request's
+    per-shard slice picks among that shard's replicas: ``"direct"``
+    (single replica) or ``"rr"`` (deterministic round-robin — the
+    load-balancing mode hub-heavy zipf traffic needs).
+    """
+
+    n_shards: int
+    replication: int
+    routing: str      # "direct" | "rr"
+    reason: str
+
+
+def choose_shard_plan(file_bytes: int, *, cache_budget_bytes: int,
+                      hot_fraction: float = 0.0,
+                      offered_edges_per_s: Optional[float] = None,
+                      shard_edges_per_s: Optional[float] = None,
+                      max_shards: int = 16) -> ShardPlan:
+    """Shard count / replication / routing from cache budgets and trace
+    skew.
+
+    Two quantities size the shard count, and the larger wins:
+
+    * **working set vs cache budget** — each shard serves one
+      contiguous vertex range, so its PG-Fuse working set is roughly
+      ``file_bytes / n_shards``; at least
+      ``ceil(file_bytes / cache_budget_bytes)`` shards keep every
+      shard's hot set resident in its own budget (the per-shard
+      locality lever: smaller working set per worker, the same effect
+      "Making Caches Work for Graph Analytics" gets from cache-
+      segmented hot sets);
+    * **offered load vs per-shard service rate** — when both are
+      known, at least ``ceil(offered_edges_per_s / shard_edges_per_s)``
+      shards carry the traffic.
+
+    ``hot_fraction`` is the measured fraction of routed traffic landing
+    on the HOTTEST shard's range (read it off a trace via the sharded
+    service's router counters).  Range sharding cannot balance a trace
+    whose hubs concentrate in one range: once one shard absorbs >= half
+    the traffic, the plan replicates every shard 2x and routes
+    round-robin so the hub shard's replicas split its load.
+    """
+    if file_bytes < 0:
+        raise ValueError(f"file_bytes must be >= 0, got {file_bytes}")
+    if cache_budget_bytes < 1:
+        raise ValueError(f"cache_budget_bytes must be >= 1, "
+                         f"got {cache_budget_bytes}")
+    if not 0 <= hot_fraction <= 1:
+        raise ValueError(f"hot_fraction must be in [0, 1], "
+                         f"got {hot_fraction}")
+    if max_shards < 1:
+        raise ValueError(f"max_shards must be >= 1, got {max_shards}")
+    if (offered_edges_per_s is None) != (shard_edges_per_s is None):
+        raise ValueError("offered_edges_per_s and shard_edges_per_s "
+                         "must be given together")
+    n_cache = max(1, -(-file_bytes // cache_budget_bytes))
+    n_load = 1
+    if offered_edges_per_s is not None:
+        if offered_edges_per_s < 0 or shard_edges_per_s <= 0:
+            raise ValueError("offered_edges_per_s must be >= 0 and "
+                             "shard_edges_per_s > 0")
+        n_load = max(1, -(-int(offered_edges_per_s)
+                          // max(1, int(shard_edges_per_s))))
+    n_shards = min(max(n_cache, n_load), max_shards)
+    replication = 2 if hot_fraction >= 0.5 else 1
+    routing = "rr" if replication > 1 else "direct"
+    return ShardPlan(
+        n_shards=n_shards, replication=replication, routing=routing,
+        reason=f"{n_cache} shard(s) fit {file_bytes} B working set into "
+               f"{cache_budget_bytes} B/shard cache budgets, {n_load} "
+               f"carry the offered load (capped at {max_shards}); "
+               f"hottest range takes {hot_fraction:.0%} of traffic -> "
+               f"{replication}x replicas, {routing} routing")
+
+
 def choose_stream_parts(n_devices_total: int = 1, process_count: int = 1,
                         min_parts_per_process: int = 8) -> int:
     """Global partition count for a (possibly multi-host) streamed load.

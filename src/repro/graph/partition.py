@@ -145,6 +145,33 @@ def host_vertex_range(entries: list[tuple[int, int]]) -> tuple[int, int]:
     return (entries[0][0], entries[-1][1])
 
 
+def shard_ranges(plan: list[tuple[int, int]], n_shards: int, *,
+                 shares=None, align: int = 1) -> list[tuple[int, int]]:
+    """Contiguous per-shard vertex ranges ``[v0, v1)`` for the sharded
+    serving path, cut from an edge-balanced partition plan.
+
+    A thin composition of :func:`split_plan` (the same slicer the
+    multi-host loader uses, including capacity-``shares`` skew and
+    block-grid ``align``) and :func:`host_vertex_range`: each shard's
+    slice collapses to its covering vertex range.  The returned ranges
+    tile the plan's coverage exactly — a shard the plan could not feed
+    (more shards than entries) gets a zero-width range pinned at the
+    previous cut, so routing by ``searchsorted`` over the range ends
+    never selects it.
+    """
+    slices = split_plan(plan, n_shards, shares=shares, align=align)
+    ranges: list[tuple[int, int]] = []
+    prev = plan[0][0] if plan else 0
+    for sl in slices:
+        if sl:
+            v0, v1 = host_vertex_range(sl)
+            ranges.append((v0, v1))
+            prev = v1
+        else:
+            ranges.append((prev, prev))
+    return ranges
+
+
 def stream_shares_from_stats(stats, *, floor: float = 0.25) -> np.ndarray:
     """Per-host capacity shares from the previous epoch's ``StreamStats``.
 

@@ -173,7 +173,8 @@ def make_traversal_server(workdir: str, *, decode: str = "auto",
                           slo_s: float = 0.5,
                           edge_budget: int = 1 << 16,
                           service_edges_per_s: float = 5.0e6,
-                          servers: int = 2, seed: int = 1):
+                          servers: int = 2, seed: int = 1,
+                          shards: int = 1, replication: int = 1):
     """The traversal request type next to GNN inference: a
     :class:`repro.query.TraversalService` over the SAME CompBin bytes
     (and the same random-access PG-Fuse policy) the inference server
@@ -186,41 +187,72 @@ def make_traversal_server(workdir: str, *, decode: str = "auto",
     and the per-request edge budget — overload sheds immediately
     (:class:`repro.query.TraversalShed`) instead of queueing into SLO
     violations.
+
+    ``shards > 1`` (or ``replication > 1``) scales out: the frontier
+    backend becomes a :class:`repro.query.ShardedQueryService` with
+    ``shards`` vertex-range shards × ``replication`` replicas, each a
+    simulated process with its own PG-Fuse mount, and the admission
+    gate is re-sized for the scaled aggregate service rate
+    (``service_edges_per_s * shards`` across ``servers * shards``
+    executors).  Traversal answers stay byte-identical to ``shards=1``
+    (see docs/sharded_serving.md).
     """
     from repro.core import paragrapher, policy
     from repro.launch.data_gnn import ensure_gnn_assets
-    from repro.query import NeighborQueryEngine, TraversalService
+    from repro.query import (NeighborQueryEngine, ShardedQueryService,
+                             TraversalService)
 
     block_size = 1 << 16
     gp, _, _ = ensure_gnn_assets(workdir, 16, 7, block_size=block_size,
                                  seed=seed)
     amode = policy.choose_access_mode("serve")
-    g = paragrapher.open_graph(
-        gp, use_pgfuse=True, pgfuse_block_size=block_size,
-        pgfuse_readahead=amode.readahead, pgfuse_eviction=amode.eviction,
-        pgfuse_max_resident_bytes=256 * block_size)
-    engine = NeighborQueryEngine(g, decode=decode)
-    plan = policy.choose_admission(
-        slo_s, edge_budget=edge_budget,
-        service_edges_per_s=service_edges_per_s, servers=servers)
-    service = TraversalService(engine, admission=plan,
+    if shards > 1 or replication > 1:
+        # each shard replica mounts its own cache slice of the same
+        # budget one mount would have had (the locality the split buys)
+        backend = ShardedQueryService(
+            gp, n_shards=shards, replication=replication, decode=decode,
+            open_kwargs=dict(
+                pgfuse_block_size=block_size,
+                pgfuse_max_resident_bytes=max(
+                    block_size, 256 * block_size // max(1, shards))))
+        engine = None
+        plan = policy.choose_admission(
+            slo_s, edge_budget=edge_budget,
+            service_edges_per_s=service_edges_per_s * shards,
+            servers=servers * shards)
+    else:
+        g = paragrapher.open_graph(
+            gp, use_pgfuse=True, pgfuse_block_size=block_size,
+            pgfuse_readahead=amode.readahead, pgfuse_eviction=amode.eviction,
+            pgfuse_max_resident_bytes=256 * block_size)
+        engine = NeighborQueryEngine(g, decode=decode)
+        backend = engine
+        plan = policy.choose_admission(
+            slo_s, edge_budget=edge_budget,
+            service_edges_per_s=service_edges_per_s, servers=servers)
+    service = TraversalService(backend, admission=plan,
                                default_max_edges=edge_budget)
 
     def close() -> None:
         service.close()
-        engine.close()
-        g.close()
+        if engine is not None:
+            engine.close()
+            g.close()
+        else:
+            backend.close()
 
     return service, close
 
 
-def serve_traversal(*, n_requests: int, batch: int, workdir: str) -> None:
+def serve_traversal(*, n_requests: int, batch: int, workdir: str,
+                    shards: int = 1, replication: int = 1) -> None:
     """Synthetic zipf traversal traffic against
     :func:`make_traversal_server`: k-hop neighborhoods, bounded BFS
     visits and shortest paths over hub-biased seeds."""
     from repro.query import TraversalShed
 
-    service, close = make_traversal_server(workdir)
+    service, close = make_traversal_server(workdir, shards=shards,
+                                           replication=replication)
     try:
         n = service.n_vertices
         rng = np.random.default_rng(0)
@@ -309,6 +341,13 @@ def main() -> None:
                     help="serve multi-hop traversal requests (k-hop / "
                          "BFS visit / shortest path) over the graph "
                          "assets instead of model inference")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="vertex-range shards for --traversal serving "
+                         "(each a simulated process with its own "
+                         "PG-Fuse mount; answers stay byte-identical)")
+    ap.add_argument("--replication", type=int, default=1,
+                    help="replicas per shard for --traversal serving "
+                         "(round-robin load balancing + failover)")
     args = ap.parse_args()
 
     spec = get_arch(args.arch)
@@ -318,7 +357,8 @@ def main() -> None:
             raise SystemExit("--traversal serves graph requests; pick a "
                              "gnn arch for its graph assets")
         serve_traversal(n_requests=args.requests, batch=args.batch,
-                        workdir=args.workdir)
+                        workdir=args.workdir, shards=args.shards,
+                        replication=args.replication)
         return
     if spec.family == "lm":
         serve_lm(cfg, batch=args.batch, prompt_len=args.prompt_len,

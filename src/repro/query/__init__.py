@@ -1,8 +1,10 @@
 from repro.query.engine import (DECODE_MODES,  # noqa: F401
                                 NeighborQueryEngine, QueryFuture, QueryStats,
-                                gather_rows)
+                                gather_rows, merge_query_stats)
 from repro.query.loadgen import (LoadGenerator, LoadReport,  # noqa: F401
                                  default_cost_fn)
+from repro.query.sharded import (RouterStats, ShardReplica,  # noqa: F401
+                                 ShardedQueryService)
 from repro.query.traversal import (TRAVERSAL_KINDS,  # noqa: F401
                                    AdmissionGate, TraversalError,
                                    TraversalRequest, TraversalResult,

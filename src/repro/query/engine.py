@@ -154,6 +154,40 @@ class QueryStats:
         d["p99_s"] = float(np.quantile(lat, 0.99)) if n else 0.0
         return d
 
+    def _snapshot(self) -> "QueryStats":
+        """A consistent copy taken under the stats lock (mutable fields
+        deep-copied, so the snapshot never aliases live state)."""
+        with self._lock:
+            return dataclasses.replace(
+                self, latencies_s=list(self.latencies_s),
+                close_reasons=dict(self.close_reasons))
+
+    def merge(self, other: "QueryStats") -> "QueryStats":
+        """Associative cross-engine aggregation (returns a NEW instance).
+
+        The sharded service (:mod:`repro.query.sharded`) folds every
+        shard replica's engine stats into service totals with this:
+        counters sum, ``close_reasons`` sum key-wise, latency samples
+        concatenate (untrimmed, so the fold is exactly associative and
+        per-shard sums equal service totals).  Each side is snapshotted
+        under its own lock — no lock ordering between the two objects,
+        so merging is safe against concurrent folds AND against
+        ``merge(self, self)``.  The invariant
+        ``sum(close_reasons.values()) == batches`` is preserved: it
+        holds for each operand, and both sides sum.
+        """
+        a, b = self._snapshot(), other._snapshot()
+        out = QueryStats()
+        for f in dataclasses.fields(out):
+            if f.name in ("latencies_s", "close_reasons"):
+                continue
+            setattr(out, f.name, getattr(a, f.name) + getattr(b, f.name))
+        for src in (a.close_reasons, b.close_reasons):
+            for k, v in src.items():
+                out.close_reasons[k] = out.close_reasons.get(k, 0) + v
+        out.latencies_s = a.latencies_s + b.latencies_s
+        return out
+
     def reset(self) -> "QueryStats":
         """Zero in place ATOMICALLY; returns the pre-reset snapshot.
 
@@ -174,6 +208,16 @@ class QueryStats:
                         [] if isinstance(cur, list)
                         else {} if isinstance(cur, dict) else 0)
         return snap
+
+
+def merge_query_stats(stats) -> QueryStats:
+    """Fold any number of engines' :class:`QueryStats` into one
+    aggregate (associative; mirrors
+    :func:`repro.data.graph_stream.merge_stats`)."""
+    out = QueryStats()
+    for s in stats:
+        out = out.merge(s)
+    return out
 
 
 class QueryFuture:

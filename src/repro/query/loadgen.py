@@ -128,6 +128,7 @@ class LoadGenerator:
                  think_s: float = 0.0, backoff_s: float = 0.01,
                  cost_fn: Callable = default_cost_fn,
                  charged_s: Optional[Callable[[], float]] = None,
+                 servers: Optional[int] = None,
                  seed: int = 0):
         if n_clients < 1 or horizon_s <= 0:
             raise ValueError("n_clients must be >= 1 and horizon_s > 0")
@@ -142,7 +143,14 @@ class LoadGenerator:
         self.cost_fn = cost_fn
         self.charged_s = charged_s
         self.seed = int(seed)
-        self.servers = service.plan.servers if service.plan else 1
+        # executor slots: by default the admission plan's sizing; a
+        # sharded deployment passes servers=plan.servers * n_shards so
+        # the virtual executors match the scaled-out admission gate
+        # (see docs/sharded_serving.md)
+        if servers is not None and servers < 1:
+            raise ValueError(f"servers must be >= 1, got {servers}")
+        self.servers = (int(servers) if servers is not None
+                        else (service.plan.servers if service.plan else 1))
 
     def run(self) -> LoadReport:
         report = LoadReport(horizon_s=self.horizon_s,

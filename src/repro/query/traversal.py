@@ -66,7 +66,7 @@ from typing import Callable, List, Optional
 import numpy as np
 
 from repro.core import policy as _policy
-from repro.query.engine import LATENCY_WINDOW, NeighborQueryEngine
+from repro.query.engine import LATENCY_WINDOW
 
 #: default per-request scanned-edge budget (generous: bounded work per
 #: request is the contract, not a tight cap)
@@ -213,6 +213,38 @@ class TraversalStats:
                           if d["submitted"] else 0.0)
         return d
 
+    def _snapshot(self) -> "TraversalStats":
+        """A consistent copy taken under the stats lock."""
+        with self._lock:
+            return dataclasses.replace(
+                self, latencies_s=list(self.latencies_s),
+                requests_by_kind=dict(self.requests_by_kind))
+
+    def merge(self, other: "TraversalStats") -> "TraversalStats":
+        """Associative cross-service aggregation (returns a NEW
+        instance) — the traversal-side sibling of
+        :meth:`repro.query.QueryStats.merge`, for folding several
+        services' (or shards') accounting into fleet totals: counters
+        sum, ``requests_by_kind`` sums key-wise, latency samples
+        concatenate untrimmed.  Each operand is snapshotted under its
+        own lock, so merging races cleanly with concurrent
+        admit/complete folds and with :meth:`reset`; both conservation
+        invariants (``submitted == admitted + shed``,
+        ``admitted == completed + failed + inflight``) survive the
+        merge because every term is a sum of terms that satisfy them.
+        """
+        a, b = self._snapshot(), other._snapshot()
+        out = TraversalStats()
+        for f in dataclasses.fields(out):
+            if f.name in ("latencies_s", "requests_by_kind"):
+                continue
+            setattr(out, f.name, getattr(a, f.name) + getattr(b, f.name))
+        for src in (a.requests_by_kind, b.requests_by_kind):
+            for k, v in src.items():
+                out.requests_by_kind[k] = out.requests_by_kind.get(k, 0) + v
+        out.latencies_s = a.latencies_s + b.latencies_s
+        return out
+
     def reset(self) -> "TraversalStats":
         """Zero in place ATOMICALLY; returns the pre-reset snapshot.
 
@@ -276,7 +308,17 @@ class AdmissionGate:
 
 
 class TraversalService:
-    """Traversal API over one :class:`~repro.query.NeighborQueryEngine`.
+    """Traversal API over a pluggable frontier-expansion backend.
+
+    ``engine`` is anything exposing the engine's query surface —
+    ``neighbors_batch_ragged(vertices) -> (offsets, ids)``,
+    ``n_vertices``, ``stats`` (a :class:`~repro.query.QueryStats`) and
+    ``_clock``: a single :class:`~repro.query.NeighborQueryEngine`, or
+    a :class:`~repro.query.sharded.ShardedQueryService` that
+    scatter-gathers each frontier across per-shard engines (at most one
+    engine batch per shard per hop, results merged back into the same
+    pinned order, so every traversal below is bit-identical regardless
+    of the shard count behind it).
 
     Synchronous use::
 
@@ -297,7 +339,7 @@ class TraversalService:
     measured on the same axis.
     """
 
-    def __init__(self, engine: NeighborQueryEngine, *,
+    def __init__(self, engine, *,
                  admission: Optional["_policy.AdmissionPlan"] = None,
                  default_max_edges: int = DEFAULT_EDGE_BUDGET,
                  clock: Optional[Callable[[], float]] = None):
@@ -312,7 +354,9 @@ class TraversalService:
 
     # -- properties --------------------------------------------------------
     @property
-    def engine(self) -> NeighborQueryEngine:
+    def engine(self):
+        """The frontier-expansion backend (a
+        :class:`NeighborQueryEngine` or sharded equivalent)."""
         return self._engine
 
     @property

@@ -1,0 +1,319 @@
+"""Differential proof for the sharded scatter-gather serving path.
+
+The :class:`repro.query.ShardedQueryService` contract is byte-identity:
+N vertex-range shards, each a simulated process with its own PG-Fuse
+mount, must answer every query batch, ragged frontier and traversal
+EXACTLY as one engine over the whole file — and both must equal the
+in-memory CSR reference.  This suite is that proof, over arbitrary
+graphs (cycles, self-loops, isolated vertices, byte-width-fence sizes),
+shard counts 1–4, replication factors 1–2, and both decode arms, with
+the scatter-gather structure itself pinned (at most one engine batch
+per shard per service batch) and router/stat conservation asserted
+after every property run.
+"""
+
+import os
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro.core import paragrapher, policy
+from repro.graph import rmat
+from repro.graph.partition import shard_ranges
+from repro.query import (NeighborQueryEngine, ShardedQueryService,
+                         TraversalService)
+from tests._prop import Draw, prop
+from tests.test_traversal_differential import _assert_matches, ref_traverse
+
+#: the per-replica mount config the property suites use: small blocks so
+#: multi-block adjacency is common, random-access policy like serving
+OPEN_KW = dict(pgfuse_block_size=512, pgfuse_readahead=0,
+               pgfuse_eviction="clock")
+
+
+def _sharded(path, draw, decode="host", **kw):
+    n_shards = draw.choice([1, 2, 3, 4]) if draw else 2
+    replication = (draw.choice([1, 1, 2]) if draw else 1)
+    okw = dict(OPEN_KW)
+    if draw:
+        okw["pgfuse_block_size"] = draw.choice([512, 1 << 12])
+    return ShardedQueryService(path, n_shards=n_shards,
+                               replication=replication, decode=decode,
+                               open_kwargs=okw, **kw)
+
+
+def _check_conservation(svc):
+    """Router/stat reconciliation after a run — per-shard sums equal
+    service totals, and nothing was routed off the books."""
+    assert svc.conserved
+    merged = svc.stats
+    per_shard = svc.per_shard_stats()
+    for field in ("requests", "unique_vertices", "batches",
+                  "blocks_touched", "coalesced_reads"):
+        assert sum(getattr(s, field) for s in per_shard) == \
+            getattr(merged, field), field
+    rd = svc.router.as_dict()
+    assert sum(rd["routed_by_shard"].values()) == rd["requests"]
+    # scatter-gather shape: every service batch ran at most one engine
+    # batch per shard (and at least one somewhere, if it had vertices)
+    if rd["batches"]:
+        assert rd["batches"] <= merged.batches \
+            <= rd["batches"] * svc.n_shards
+        assert sum(rd["shard_batches"].values()) == merged.batches
+
+
+@prop(8)
+def test_sharded_queries_match_single_engine_and_csr(draw: Draw):
+    """Arbitrary graphs x shard counts 1-4 x replication: batched
+    neighbors and ragged frontiers from the sharded service are
+    byte-identical to ONE engine over the whole file and to the CSR."""
+    csr = draw.csr(max_edges=2048)
+    if csr.n_vertices == 0:
+        return
+    with tempfile.TemporaryDirectory() as d:
+        gp = os.path.join(d, "g.cbin")
+        paragrapher.save_graph(gp, csr, format="compbin")
+        svc = _sharded(gp, draw)
+        g = paragrapher.open_graph(gp, use_pgfuse=True, **OPEN_KW)
+        eng = NeighborQueryEngine(g, decode="host")
+        try:
+            for _ in range(4):
+                batch = draw.vertex_batch(csr.n_vertices)
+                got = svc.neighbors_batch(batch)
+                want = eng.neighbors_batch(batch)
+                assert len(got) == len(want) == len(batch)
+                for v, a, b in zip(batch, got, want):
+                    assert np.array_equal(a, b), int(v)
+                    assert np.array_equal(a, csr.neighbors_of(int(v)))
+                # ragged form: same flat buffer, same offsets, and for a
+                # sorted frontier the pinned ascending-id order
+                frontier = np.unique(batch)
+                go, gi = svc.neighbors_batch_ragged(frontier)
+                wo, wi = eng.neighbors_batch_ragged(frontier)
+                assert np.array_equal(go, wo) and np.array_equal(gi, wi)
+                assert go.dtype == np.int64 and gi.dtype == np.int64
+            _check_conservation(svc)
+        finally:
+            eng.close(), g.close(), svc.close()
+
+
+@prop(8)
+def test_sharded_traversals_match_reference(draw: Draw):
+    """All three traversal modes over the sharded frontier backend vs
+    the pure CSR reference: khop/bfs with tight edge/vertex budgets
+    (overshoot stop orders landing ON shard boundaries included) and
+    shortest paths with deterministic parents."""
+    csr = draw.csr(max_edges=1500)
+    if csr.n_vertices == 0:
+        return
+    with tempfile.TemporaryDirectory() as d:
+        gp = os.path.join(d, "g.cbin")
+        paragrapher.save_graph(gp, csr, format="compbin")
+        svc = _sharded(gp, draw)
+        trav = TraversalService(svc)
+        try:
+            for _ in range(3):
+                seeds = draw.vertex_batch(csr.n_vertices, max_size=24)
+                if seeds.size == 0:
+                    continue
+                k = draw.int(0, 4)
+                max_edges = draw.choice(
+                    [1 << 20, draw.int(0, max(1, csr.n_edges))])
+                max_vertices = (None if draw.bool() else
+                                draw.int(1, max(1, csr.n_vertices)))
+                res = trav.khop(seeds, k, max_edges=max_edges,
+                                max_vertices=max_vertices)
+                ref = ref_traverse(csr, "khop", seeds, k=k,
+                                   max_edges=max_edges,
+                                   max_vertices=max_vertices)
+                _assert_matches(res, ref, ("khop", k, max_edges,
+                                           svc.n_shards))
+                res = trav.bfs_visit(seeds, max_edges=max_edges,
+                                     max_vertices=max_vertices)
+                ref = ref_traverse(csr, "bfs", seeds, max_edges=max_edges,
+                                   max_vertices=max_vertices)
+                _assert_matches(res, ref, ("bfs", max_edges, max_vertices,
+                                           svc.n_shards))
+                src = draw.int(0, csr.n_vertices - 1)
+                dst = draw.int(0, csr.n_vertices - 1)
+                res = trav.shortest_path(src, dst, max_edges=max_edges)
+                ref = ref_traverse(csr, "path", [src], target=dst,
+                                   max_edges=max_edges)
+                _assert_matches(res, ref, ("path", src, dst,
+                                           svc.n_shards))
+            # each hop was ONE service batch scattering to <= n_shards
+            # engine batches
+            assert svc.router.batches == trav.stats.frontier_batches
+            _check_conservation(svc)
+        finally:
+            trav.close(), svc.close()
+
+
+@prop(4)
+def test_sharded_device_decode_arm_matches_reference(draw: Draw):
+    """The Pallas device-decode arm per shard replica answers identically
+    to the host arm and the reference; every per-shard batch with edges
+    really ran the kernel."""
+    csr = draw.csr(max_edges=1500)
+    if csr.n_vertices == 0:
+        return
+    with tempfile.TemporaryDirectory() as d:
+        gp = os.path.join(d, "g.cbin")
+        paragrapher.save_graph(gp, csr, format="compbin")
+        svc_d = ShardedQueryService(gp, n_shards=draw.choice([2, 3]),
+                                    decode="device", open_kwargs=OPEN_KW)
+        trav = TraversalService(svc_d)
+        try:
+            for _ in range(3):
+                seeds = draw.vertex_batch(csr.n_vertices, max_size=16)
+                if seeds.size == 0:
+                    continue
+                k = draw.int(0, 3)
+                ref = ref_traverse(csr, "khop", seeds, k=k)
+                _assert_matches(trav.khop(seeds, k), ref, "device")
+            st = svc_d.stats
+            assert st.device_batches == st.batches
+            _check_conservation(svc_d)
+        finally:
+            trav.close(), svc_d.close()
+
+
+def test_routing_table_and_validation(tmp_path):
+    """Range routing: shard_of agrees with the published ranges, empty
+    shards are never selected, out-of-range ids raise the engine's
+    ValueError, closed services refuse requests."""
+    csr = rmat(8, 5, seed=2)
+    gp = str(tmp_path / "g.cbin")
+    paragrapher.save_graph(gp, csr, format="compbin")
+    svc = ShardedQueryService(gp, n_shards=4, open_kwargs=OPEN_KW)
+    try:
+        assert [r for r in svc.ranges if r[0] < r[1]], svc.ranges
+        assert svc.ranges[0][0] == 0
+        assert svc.ranges[-1][1] == csr.n_vertices
+        for s, (v0, v1) in enumerate(svc.ranges):
+            for v in {v0, (v0 + v1) // 2, v1 - 1} if v0 < v1 else ():
+                assert svc.shard_of(v) == s, (s, v)
+        assert svc.neighbors_batch([]) == []
+        with pytest.raises(ValueError, match="vertex ids"):
+            svc.neighbors_batch([csr.n_vertices])
+        with pytest.raises(ValueError, match="vertex ids"):
+            svc.neighbors_batch([-1])
+        assert np.array_equal(svc.neighbors_of(3), csr.neighbors_of(3))
+    finally:
+        svc.close()
+    with pytest.raises(ValueError, match="closed"):
+        svc.neighbors_batch([0])
+    svc.close()  # idempotent
+
+
+def test_more_shards_than_coverage(tmp_path):
+    """More shards than the plan can feed: trailing shards get zero-width
+    ranges, are never routed to, and answers stay correct."""
+    csr = rmat(4, 3, seed=5)   # tiny graph
+    gp = str(tmp_path / "g.cbin")
+    paragrapher.save_graph(gp, csr, format="compbin")
+    with ShardedQueryService(gp, n_shards=4, n_parts=2,
+                             open_kwargs=OPEN_KW) as svc:
+        assert len(svc.ranges) == 4
+        assert any(v0 == v1 for v0, v1 in svc.ranges)
+        batch = np.arange(csr.n_vertices, dtype=np.int64)
+        for v, nbrs in zip(batch, svc.neighbors_batch(batch)):
+            assert np.array_equal(nbrs, csr.neighbors_of(int(v)))
+        empty = {s for s, (v0, v1) in enumerate(svc.ranges) if v0 == v1}
+        assert not (set(svc.router.routed_by_shard) & empty)
+        _check_conservation(svc)
+
+
+def test_replication_round_robin_spreads_and_stays_identical(tmp_path):
+    """replication=2 with rr routing: consecutive per-shard batches
+    alternate replicas (hub traffic splits across mounts), answers stay
+    byte-identical, and the merged stats still reconcile."""
+    csr = rmat(8, 5, seed=7)
+    gp = str(tmp_path / "g.cbin")
+    paragrapher.save_graph(gp, csr, format="compbin")
+    with ShardedQueryService(gp, n_shards=2, replication=2,
+                             open_kwargs=OPEN_KW) as svc:
+        assert svc.routing == "rr"
+        hub = svc.ranges[0][0]      # every batch hits shard 0 only
+        for _ in range(6):
+            got = svc.neighbors_batch([hub])
+            assert np.array_equal(got[0], csr.neighbors_of(int(hub)))
+        row = svc.replicas[0]
+        counts = [rep.engine.stats.batches for rep in row]
+        assert counts == [3, 3], counts         # perfect alternation
+        assert svc.replicas[1][0].engine.stats.batches == 0
+        _check_conservation(svc)
+
+
+@prop(8)
+def test_shard_ranges_tile_plan_coverage(draw: Draw):
+    """shard_ranges: monotone non-overlapping ranges exactly tiling the
+    plan's coverage, shares skew included; zero-width ranges pin to the
+    previous cut so searchsorted routing never selects them."""
+    csr = draw.csr(max_edges=1024)
+    plan = draw.plan(csr)
+    n_shards = draw.process_count()
+    shares = draw.shares(n_shards) if draw.bool() else None
+    ranges = shard_ranges(plan, n_shards, shares=shares)
+    assert len(ranges) == n_shards
+    if not plan:
+        assert all(r == (0, 0) for r in ranges)
+        return
+    prev = plan[0][0]
+    for v0, v1 in ranges:
+        assert v0 <= v1
+        assert v0 == prev           # contiguous tiling, no gaps
+        prev = v1
+    assert prev == plan[-1][1]
+    # routing consistency: bounds-ends searchsorted lands every covered
+    # vertex in the shard whose range holds it
+    bounds = np.asarray([v1 for _, v1 in ranges], dtype=np.int64)
+    for s, (v0, v1) in enumerate(ranges):
+        for v in {v0, v1 - 1} if v0 < v1 else ():
+            assert int(np.searchsorted(bounds, v, side="right")) == s
+
+
+def test_choose_shard_plan_policy():
+    """Shard-count sizing: cache pressure and offered load each force
+    shards up (capped), hub-heavy traffic turns on replication + rr."""
+    GiB = 1 << 30
+    p = policy.choose_shard_plan(1 * GiB, cache_budget_bytes=2 * GiB)
+    assert (p.n_shards, p.replication, p.routing) == (1, 1, "direct")
+    p = policy.choose_shard_plan(8 * GiB, cache_budget_bytes=2 * GiB)
+    assert p.n_shards == 4 and "cache budgets" in p.reason
+    p = policy.choose_shard_plan(1 * GiB, cache_budget_bytes=2 * GiB,
+                                 offered_edges_per_s=20e6,
+                                 shard_edges_per_s=5e6)
+    assert p.n_shards == 4
+    p = policy.choose_shard_plan(64 * GiB, cache_budget_bytes=1 * GiB,
+                                 max_shards=16)
+    assert p.n_shards == 16        # capped
+    p = policy.choose_shard_plan(1 * GiB, cache_budget_bytes=2 * GiB,
+                                 hot_fraction=0.7)
+    assert p.replication == 2 and p.routing == "rr"
+    with pytest.raises(ValueError):
+        policy.choose_shard_plan(-1, cache_budget_bytes=1)
+    with pytest.raises(ValueError):
+        policy.choose_shard_plan(1, cache_budget_bytes=1,
+                                 offered_edges_per_s=1e6)  # rate pair
+
+
+def test_service_from_shard_plan(tmp_path):
+    """A ShardPlan from the policy wires straight into the service
+    constructor (explicit kwargs still win)."""
+    csr = rmat(7, 4, seed=4)
+    gp = str(tmp_path / "g.cbin")
+    paragrapher.save_graph(gp, csr, format="compbin")
+    size = os.path.getsize(gp)
+    plan = policy.choose_shard_plan(size, cache_budget_bytes=-(-size // 2),
+                                    hot_fraction=0.8)
+    assert plan.n_shards >= 2 and plan.replication == 2
+    with ShardedQueryService(gp, plan=plan, open_kwargs=OPEN_KW) as svc:
+        assert svc.n_shards == plan.n_shards
+        assert svc.replication == 2 and svc.routing == "rr"
+        v = csr.n_vertices // 2
+        assert np.array_equal(svc.neighbors_of(v), csr.neighbors_of(v))
+    with ShardedQueryService(gp, plan=plan, replication=1,
+                             open_kwargs=OPEN_KW) as svc:
+        assert svc.replication == 1    # explicit kwarg overrides plan

@@ -1,0 +1,198 @@
+"""Fault isolation and failover for the sharded serving path.
+
+Each shard replica owns its OWN PG-Fuse mount, so a storage fault is a
+*per-mount* event: an EIO burst on one shard's mount must leave every
+other shard answering byte-identically (their mounts never saw the
+fault), surface on the failed shard as a clean per-request error with
+router/gate/stat conservation intact after the drain, and — when the
+shard is replicated — be absorbed entirely by failover to a sibling
+replica (``router.reroutes`` counting the trips, ``retried_reads``
+counting per-mount retry healing underneath).
+"""
+
+import errno
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import paragrapher
+from repro.graph import rmat
+from repro.query import (ShardedQueryService, TraversalError,
+                         TraversalService)
+from tests.conftest import FaultyStorage
+
+BLOCK = 512
+OPEN_KW = dict(pgfuse_block_size=BLOCK, pgfuse_readahead=0,
+               pgfuse_eviction="clock", pgfuse_retry_backoff_s=0.0)
+
+
+@pytest.fixture
+def graph_file(tmp_path):
+    csr = rmat(9, 7, seed=42)
+    gp = str(tmp_path / "g.cbin")
+    paragrapher.save_graph(gp, csr, format="compbin")
+    return gp, csr
+
+
+def _burst(fs: FaultyStorage, n: int = 400) -> FaultyStorage:
+    """A persistent EIO burst: the next ``n`` underlying calls on the
+    instrumented mount all fail (fail_at entries pop as they fire)."""
+    start = fs.n_calls
+    for i in range(start + 1, start + 1 + n):
+        fs.fail_at[i] = OSError(errno.EIO, "dead OST")
+    return fs
+
+
+def test_eio_burst_confined_to_one_shard(graph_file):
+    """An EIO burst on shard 1's mount: shard-0 queries answer
+    byte-identically throughout (their mount never saw the fault),
+    shard-1 queries fail with a clean OSError that is accounted in
+    ``failed_batches``, conservation holds mid-failure, and once the
+    burst passes the shard serves again — no restart, no residue."""
+    gp, csr = graph_file
+    with ShardedQueryService(gp, n_shards=2, open_kwargs=OPEN_KW) as svc:
+        (a0, a1), (b0, b1) = svc.ranges
+        assert a1 == b0 and a0 < a1 < b1
+        fs = _burst(FaultyStorage().install_graph(
+            svc.replicas[1][0].graph))
+        healthy = np.arange(a0, a1, dtype=np.int64)[:64]
+        sick = np.arange(b0, b1, dtype=np.int64)[:64]
+        for _ in range(3):
+            got = svc.neighbors_batch(healthy)
+            for v, nbrs in zip(healthy, got):
+                assert np.array_equal(nbrs, csr.neighbors_of(int(v)))
+        with pytest.raises(OSError):
+            svc.neighbors_batch(sick)
+        # a mixed batch fails too, but the healthy shard's slice was
+        # answered and folded before the sick shard raised:
+        # conservation must hold MID-failure, not just after recovery
+        mixed = np.concatenate([healthy[:4], sick[:4]])
+        with pytest.raises(OSError):
+            svc.neighbors_batch(mixed)
+        rd = svc.router.as_dict()
+        assert rd["failed_batches"] == 2 and rd["reroutes"] == 0
+        assert svc.conserved
+        fs.fail_at.clear()              # the burst passes
+        got = svc.neighbors_batch(sick)
+        for v, nbrs in zip(sick, got):
+            assert np.array_equal(nbrs, csr.neighbors_of(int(v)))
+        assert svc.conserved
+        assert svc.per_shard_stats()[0].requests == \
+            svc.router.routed_by_shard[0]
+
+
+def test_failed_shard_is_clean_per_request_traversal_error(graph_file):
+    """Traversals through a sharded backend with one dead shard: a
+    traversal confined to healthy shards answers byte-identically; one
+    whose frontier crosses into the dead range fails as a clean
+    per-request error — admission tokens drain, TraversalStats
+    conserve, and concurrent healthy traversals never notice."""
+    gp, csr = graph_file
+    # fault-free reference answers
+    with ShardedQueryService(gp, n_shards=2, open_kwargs=OPEN_KW) as ref:
+        rtrav = TraversalService(ref)
+        (h0, h1), (s0, _) = ref.ranges
+        healthy_seeds = [int(h0), int(h0 + 1)]
+        sick_seeds = [int(s0)]
+        ref_res = rtrav.khop(healthy_seeds, 2)
+        rtrav.close()
+    with ShardedQueryService(gp, n_shards=2, open_kwargs=OPEN_KW) as svc:
+        trav = TraversalService(svc)
+        _burst(FaultyStorage().install_graph(svc.replicas[1][0].graph))
+        try:
+            results, errors = [], []
+
+            def run(seeds):
+                try:
+                    results.append(trav.khop(seeds, 2))
+                except (OSError, TraversalError) as e:
+                    errors.append(e)
+
+            ts = [threading.Thread(target=run, args=(s,))
+                  for s in (healthy_seeds, sick_seeds, healthy_seeds)]
+            for t in ts:
+                t.start()
+            for t in ts:
+                t.join()
+            # k=2 from the healthy range may or may not cross the shard
+            # boundary; seeds themselves guarantee at least the sick
+            # seed's traversal died and the healthy ones that stayed
+            # in-range survived byte-identically
+            assert len(errors) >= 1
+            for res in results:
+                if res.vertices.tolist() == ref_res.vertices.tolist():
+                    assert res.depths.tolist() == ref_res.depths.tolist()
+            st = trav.stats
+            assert st.conserved and st.inflight == 0
+            assert st.failed == len(errors)
+            assert st.completed == len(results)
+            assert trav.gate.inflight == 0 and \
+                trav.gate.edges_inflight == 0
+            assert svc.conserved
+        finally:
+            trav.close()
+
+
+def test_replicated_shard_fails_over_to_sibling(graph_file):
+    """replication=2: an EIO burst on shard 0's replica-0 mount is
+    invisible to callers — every batch that lands on the dead replica
+    reroutes to its sibling and answers byte-identically, with
+    ``router.reroutes`` counting exactly the failovers and
+    ``failed_batches`` staying zero."""
+    gp, csr = graph_file
+    with ShardedQueryService(gp, n_shards=2, replication=2,
+                             open_kwargs=OPEN_KW) as svc:
+        assert svc.routing == "rr"
+        _burst(FaultyStorage().install_graph(svc.replicas[0][0].graph))
+        v0 = svc.ranges[0][0]
+        batch = np.arange(v0, v0 + 8, dtype=np.int64)
+        for _ in range(4):               # rr start alternates 0,1,0,1
+            got = svc.neighbors_batch(batch)
+            for v, nbrs in zip(batch, got):
+                assert np.array_equal(nbrs, csr.neighbors_of(int(v)))
+        rd = svc.router.as_dict()
+        # batches whose rr pointer started at the dead replica rerouted
+        assert rd["reroutes"] == 2 and rd["failed_batches"] == 0
+        assert rd["shard_batches"][0] == 4
+        # the sibling answered everything
+        assert svc.replicas[0][1].engine.stats.batches == 4
+        assert svc.replicas[0][0].engine.stats.batches == 0
+        assert svc.conserved
+
+
+def test_all_replicas_dead_surfaces_last_error(graph_file):
+    """Both replicas of a shard dead: the request raises the LAST
+    replica's OSError after trying every sibling, and the batch counts
+    as failed (one reroute per sibling tried, then the failure)."""
+    gp, _ = graph_file
+    with ShardedQueryService(gp, n_shards=2, replication=2,
+                             open_kwargs=OPEN_KW) as svc:
+        for r in range(2):
+            _burst(FaultyStorage().install_graph(svc.replicas[0][r].graph))
+        with pytest.raises(OSError, match="dead OST"):
+            svc.neighbors_batch([svc.ranges[0][0]])
+        rd = svc.router.as_dict()
+        assert rd["reroutes"] == 1 and rd["failed_batches"] == 1
+        assert svc.conserved
+
+
+def test_per_mount_retries_heal_under_replication(graph_file):
+    """Transient (single-shot) EIO with per-mount ``pgfuse_retries``:
+    the replica heals itself underneath the router — ``retried_reads``
+    on that mount counts the healing, and NO reroute happens (failover
+    is for errors retry could not absorb)."""
+    gp, csr = graph_file
+    with ShardedQueryService(
+            gp, n_shards=2, replication=2,
+            open_kwargs=dict(OPEN_KW, pgfuse_retries=2)) as svc:
+        target = svc.replicas[0][0]
+        fs = FaultyStorage().install_graph(target.graph)
+        fs.fail_at[1] = OSError(errno.EIO, "flaky OST")   # transient
+        v0 = svc.ranges[0][0]
+        got = svc.neighbors_batch([v0])
+        assert np.array_equal(got[0], csr.neighbors_of(int(v0)))
+        assert target.graph.pgfuse_stats().retried_reads == 1
+        rd = svc.router.as_dict()
+        assert rd["reroutes"] == 0 and rd["failed_batches"] == 0
+        assert svc.conserved

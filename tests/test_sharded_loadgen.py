@@ -1,0 +1,110 @@
+"""Deterministic overload comparison: sharded vs single-process serving.
+
+The scale-out claim the sharded service makes — N shards carry N times
+the offered load at the same SLO — becomes a CI-gateable number on the
+loadgen's virtual clock: the SAME zipf client fleet is replayed against
+a 1-shard and a 2-shard deployment (the 2-shard gate re-sized for the
+doubled aggregate service rate, exactly as
+``launch.serve.make_traversal_server(shards=2)`` sizes it), and the
+2-shard arm must shed strictly less while BOTH arms keep admitted-p99
+within the SLO.  Same seed => bit-identical reports, sharded arm
+included.
+"""
+
+import numpy as np
+
+from repro.core import paragrapher
+from repro.core.policy import choose_admission
+from repro.graph import rmat
+from repro.query import (LoadGenerator, ShardedQueryService,
+                         TraversalRequest, TraversalService)
+
+SLO_S = 0.02
+EDGE_BUDGET = 8192
+RATE = 5.0e6          # one shard's service_edges_per_s
+SERVERS = 1           # executors per shard
+
+OPEN_KW = dict(pgfuse_block_size=1 << 12, pgfuse_readahead=0,
+               pgfuse_eviction="clock")
+
+
+def _graph(tmp_path):
+    csr = rmat(9, 6, seed=3)
+    gp = str(tmp_path / "g.cbin")
+    paragrapher.save_graph(gp, csr, format="compbin")
+    return gp
+
+
+def _make_request(rng: np.random.Generator, client_id: int):
+    n = 512
+    seeds = np.minimum(rng.zipf(1.8, size=3) - 1, n - 1)
+    return TraversalRequest("khop", seeds, k=2, max_edges=EDGE_BUDGET)
+
+
+def _run(graph_file, *, shards, n_clients, seed=7, horizon_s=0.2):
+    """One virtual-clock overload run against an n-shard deployment.
+
+    The admission plan and the loadgen's executor count both scale by
+    the shard count — the apples-to-apples deployment comparison: same
+    clients, same traffic, N times the serving capacity.
+    """
+    svc = ShardedQueryService(graph_file, n_shards=shards,
+                              open_kwargs=OPEN_KW)
+    plan = choose_admission(SLO_S, edge_budget=EDGE_BUDGET,
+                            service_edges_per_s=RATE * shards,
+                            servers=SERVERS * shards)
+    trav = TraversalService(svc, admission=plan)
+    try:
+        gen = LoadGenerator(trav, _make_request, n_clients=n_clients,
+                            horizon_s=horizon_s, think_s=0.0,
+                            backoff_s=0.01, servers=SERVERS * shards,
+                            seed=seed)
+        report = gen.run()
+        return report, trav.stats.as_dict(), svc.router.as_dict()
+    finally:
+        trav.close(), svc.close()
+
+
+def test_two_shards_shed_less_at_equal_offered_load(tmp_path):
+    """48 clients against 1 vs 2 shards: the 2-shard gate admits twice
+    the in-flight work, so the shed rate drops strictly — while BOTH
+    arms keep admitted-p99 within the SLO (the gate never buys
+    throughput with latency)."""
+    gp = _graph(tmp_path)
+    one, st1, _ = _run(gp, shards=1, n_clients=48, horizon_s=0.1)
+    two, st2, rd2 = _run(gp, shards=2, n_clients=48, horizon_s=0.1)
+    assert one.shed > 0                       # genuinely overloaded
+    assert two.shed_rate < one.shed_rate
+    assert two.completed > one.completed      # capacity, not accounting
+    assert one.p99_s <= SLO_S and two.p99_s <= SLO_S
+    # conservation on both services' own counters after the drain
+    for st in (st1, st2):
+        assert st["submitted"] == st["admitted"] + st["shed"]
+        assert st["admitted"] == st["completed"] + st["failed"]
+        assert st["inflight"] == 0
+    # the 2-shard run really scattered: both shards answered traffic
+    assert set(rd2["routed_by_shard"]) == {0, 1}
+    assert all(v > 0 for v in rd2["routed_by_shard"].values())
+
+
+def test_sharded_overload_run_is_bit_reproducible(tmp_path):
+    """Same seed, same graph, same shard count => identical report,
+    latencies included, and identical service + router counters — the
+    scatter-gather layer adds no nondeterminism to the virtual day."""
+    gp = _graph(tmp_path)
+    a, sa, ra = _run(gp, shards=2, n_clients=8, seed=11, horizon_s=0.05)
+    b, sb, rb = _run(gp, shards=2, n_clients=8, seed=11, horizon_s=0.05)
+    assert a.as_dict() == b.as_dict()
+    assert a.latencies_s == b.latencies_s
+    assert sa == sb and ra == rb
+    c, _, _ = _run(gp, shards=2, n_clients=8, seed=12, horizon_s=0.05)
+    assert c.latencies_s != a.latencies_s
+
+
+def test_loadgen_servers_override_validates():
+    import pytest
+
+    from repro.query import NeighborQueryEngine  # noqa: F401  (API)
+    with pytest.raises(ValueError, match="servers"):
+        LoadGenerator(object(), lambda rng, c: None, n_clients=1,
+                      horizon_s=1.0, servers=0)

@@ -1,0 +1,191 @@
+"""Associative stats aggregation — the accounting layer the sharded
+service's fleet totals stand on.
+
+``QueryStats.merge`` / ``TraversalStats.merge`` must be associative
+(fold order across shards cannot change the totals), invariant-
+preserving (``sum(close_reasons) == batches``; both traversal
+conservation identities), and safe against the two concurrent
+mutations a live service performs: per-batch folds and atomic
+``reset()``.  The stress tests here race all three and demand that no
+batch is ever lost or double-counted and that every merged snapshot
+satisfies the invariants at every instant.
+"""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.query import QueryStats, TraversalStats, merge_query_stats
+
+
+def _qstats(requests=0, unique=0, batches=0, reasons=(), lat=()):
+    st = QueryStats()
+    st.requests, st.unique_vertices, st.batches = requests, unique, batches
+    for r in reasons:
+        st.close_reasons[r] = st.close_reasons.get(r, 0) + 1
+    st.latencies_s = list(lat)
+    return st
+
+
+def test_query_stats_merge_sums_and_preserves_invariant():
+    a = _qstats(10, 4, 2, ["direct", "full"], [0.1, 0.2])
+    b = _qstats(6, 3, 3, ["direct", "timeout", "direct"], [0.3])
+    m = a.merge(b)
+    assert (m.requests, m.unique_vertices, m.batches) == (16, 7, 5)
+    assert m.close_reasons == {"direct": 3, "full": 1, "timeout": 1}
+    assert sum(m.close_reasons.values()) == m.batches
+    assert m.latencies_s == [0.1, 0.2, 0.3]
+    # merge is a pure fold: operands untouched, result independent
+    assert a.requests == 10 and b.requests == 6
+    m.requests += 1
+    assert a.requests == 10
+    # identity: merging a zero element changes nothing
+    assert a.merge(QueryStats()).as_dict() == a.as_dict()
+
+
+def test_query_stats_merge_associative():
+    a = _qstats(10, 4, 2, ["direct"] * 2, [0.1])
+    b = _qstats(6, 3, 3, ["full"] * 3, [0.2, 0.4])
+    c = _qstats(9, 9, 1, ["plateau"], [0.5])
+    left = a.merge(b).merge(c)
+    right = a.merge(b.merge(c))
+    assert left.as_dict() == right.as_dict()
+    assert left.latencies_s == right.latencies_s
+    # merge_query_stats is the same left fold
+    assert merge_query_stats([a, b, c]).as_dict() == left.as_dict()
+    assert merge_query_stats([]).requests == 0
+    # self-merge must not deadlock (snapshot, then combine)
+    d = a.merge(a)
+    assert d.requests == 20 and d.batches == 4
+
+
+def _tstats(submitted, admitted, shed, completed, failed, inflight,
+            kinds=(), lat=()):
+    st = TraversalStats()
+    (st.submitted, st.admitted, st.shed, st.completed, st.failed,
+     st.inflight) = (submitted, admitted, shed, completed, failed,
+                     inflight)
+    for k in kinds:
+        st.requests_by_kind[k] = st.requests_by_kind.get(k, 0) + 1
+    st.latencies_s = list(lat)
+    return st
+
+
+def test_traversal_stats_merge_sums_and_conserves():
+    a = _tstats(5, 4, 1, 3, 0, 1, ["khop", "bfs"], [0.1])
+    b = _tstats(7, 5, 2, 4, 1, 0, ["khop"], [0.2, 0.3])
+    assert a.conserved and b.conserved
+    m = a.merge(b)
+    assert (m.submitted, m.admitted, m.shed) == (12, 9, 3)
+    assert (m.completed, m.failed, m.inflight) == (7, 1, 1)
+    assert m.conserved
+    assert m.requests_by_kind == {"khop": 2, "bfs": 1}
+    assert m.latencies_s == [0.1, 0.2, 0.3]
+    left = a.merge(b).merge(a)
+    right = a.merge(b.merge(a))
+    assert left.as_dict() == right.as_dict()
+
+
+def test_query_stats_concurrent_merge_vs_fold_vs_reset():
+    """Engine-style folds + periodic reset() + periodic merge
+    snapshots, all racing: every merged snapshot satisfies
+    sum(close_reasons) == batches, and folded + reset-absorbed batches
+    reconcile exactly at the end — nothing lost, nothing doubled."""
+    st = QueryStats()
+    N_FOLDS, N_THREADS = 400, 4
+    absorbed = []          # reset() snapshots (the drained history)
+    bad = []
+
+    def fold():
+        for _ in range(N_FOLDS):
+            with st._lock:     # exactly how the engine folds a batch
+                st.requests += 3
+                st.batches += 1
+                st.close_reasons["direct"] = \
+                    st.close_reasons.get("direct", 0) + 1
+                st.latencies_s.append(0.001)
+
+    def resetter():
+        for _ in range(50):
+            absorbed.append(st.reset())
+
+    def merger():
+        for _ in range(100):
+            m = st.merge(st)   # snapshot-based: safe, non-blocking
+            if sum(m.close_reasons.values()) != m.batches:
+                bad.append(m)
+
+    threads = [threading.Thread(target=fold) for _ in range(N_THREADS)]
+    threads += [threading.Thread(target=resetter),
+                threading.Thread(target=merger)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not bad, "a merged snapshot tore the close_reasons invariant"
+    total = merge_query_stats(absorbed + [st])
+    assert total.batches == N_FOLDS * N_THREADS
+    assert total.requests == 3 * N_FOLDS * N_THREADS
+    assert total.close_reasons == {"direct": N_FOLDS * N_THREADS}
+    assert sum(total.close_reasons.values()) == total.batches
+
+
+def test_traversal_stats_concurrent_merge_vs_reset():
+    """Service-style request lifecycles + reset() + merge, racing: every
+    merge sees a conserved snapshot and the final fold of all reset
+    snapshots plus the live object loses no request."""
+    st = TraversalStats()
+    N_REQ = 300
+    absorbed, bad = [], []
+
+    def lifecycle():
+        for i in range(N_REQ):
+            with st._lock:
+                st.submitted += 1
+                st.admitted += 1
+                st.inflight += 1
+            with st._lock:
+                st.inflight -= 1
+                st.completed += 1
+                st.latencies_s.append(0.001)
+
+    def resetter():
+        for _ in range(40):
+            absorbed.append(st.reset())
+
+    def merger():
+        for _ in range(80):
+            m = st.merge(st)
+            if not m.conserved:
+                bad.append(m.as_dict())
+
+    threads = [threading.Thread(target=lifecycle) for _ in range(3)]
+    threads += [threading.Thread(target=resetter),
+                threading.Thread(target=merger)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not bad, f"merge saw a torn snapshot: {bad[:1]}"
+    total = TraversalStats()
+    for s in absorbed + [st]:
+        total = total.merge(s)
+    assert total.submitted == total.admitted == 3 * N_REQ
+    assert total.completed == 3 * N_REQ
+    assert total.inflight == 0 and total.shed == 0
+    assert total.conserved
+
+
+def test_merge_untrimmed_latencies_keep_associativity():
+    """merge() concatenates latency samples UNTRIMMED: trimming to the
+    rolling window inside merge would make (a+b)+c drop different
+    samples than a+(b+c).  The window applies at fold time (engine) and
+    quantile time, never inside the fold."""
+    from repro.query.engine import LATENCY_WINDOW
+    a = _qstats(lat=[0.1] * LATENCY_WINDOW)
+    b = _qstats(lat=[0.2] * LATENCY_WINDOW)
+    c = _qstats(lat=[0.3])
+    left, right = a.merge(b).merge(c), a.merge(b.merge(c))
+    assert len(left.latencies_s) == 2 * LATENCY_WINDOW + 1
+    assert left.latencies_s == right.latencies_s
