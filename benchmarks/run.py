@@ -125,6 +125,21 @@ def _suite_sharded(args) -> None:
                 out=args.sharded_out)
 
 
+def _suite_hotset(args) -> None:
+    """HBM-resident hot-set tier (decoded hub runs, degree-aware
+    admission) vs the packed-byte-only engine on a degree-correlated
+    zipf trace -> BENCH_hotset.json (hit advantage gated upward with a
+    hard >=1.5x floor, hot-arm virtual-clock p50/p99 gated downward)."""
+    from benchmarks import hotset
+
+    print("=" * 72)
+    print("Hotset — HBM decoded-run tier vs packed path (emits BENCH json)")
+    print("=" * 72)
+    hotset.run(workdir=args.workdir,
+               scale=13 if args.fast else 16,
+               out=args.hotset_out)
+
+
 #: registered suites, executed in order by default — add new benchmark
 #: harnesses here so ``python -m benchmarks.run`` stays the one entry
 #: point that emits every artifact (CSV blocks and BENCH_*.json alike)
@@ -134,6 +149,7 @@ SUITES = {
     "query": _suite_query,
     "traversal": _suite_traversal,
     "sharded": _suite_sharded,
+    "hotset": _suite_hotset,
 }
 
 
@@ -156,6 +172,8 @@ def main() -> None:
                     help="where the traversal suite writes its BENCH json")
     ap.add_argument("--sharded-out", default="BENCH_sharded.json",
                     help="where the sharded suite writes its BENCH json")
+    ap.add_argument("--hotset-out", default="BENCH_hotset.json",
+                    help="where the hotset suite writes its BENCH json")
     args = ap.parse_args()
 
     picked = [s.strip() for s in args.suites.split(",") if s.strip()]

@@ -51,6 +51,12 @@ its budget reclaims from its OWN files first (biggest resident first,
 each file's clock hand supplying second chances), and the mount-wide
 sweep protects every share still inside its budget — so one tenant's
 churn can never evict another tenant's warm set, only its own.
+
+In the serving stack this layer is the MIDDLE tier of the three-tier
+cache hierarchy (docs/architecture.md): storage blocks below it, and
+above it the HBM-resident hot set of *decoded* neighbor runs
+(:class:`repro.query.HotSetCache`) — a hot-set hit skips PG-Fuse
+entirely; a miss lands here as packed-byte block reads.
 """
 
 from __future__ import annotations

@@ -375,6 +375,83 @@ def choose_shard_plan(file_bytes: int, *, cache_budget_bytes: int,
                f"{replication}x replicas, {routing} routing")
 
 
+@dataclasses.dataclass
+class HotSetPlan:
+    """Admission/placement config for the HBM-resident hot-set tier
+    (:class:`repro.query.hotset.HotSetCache`) — cache tier 3, above
+    PG-Fuse's host-RAM packed blocks.
+
+    An entry costs ``8 * degree`` budget bytes (a decoded int64 run),
+    so every threshold below is a *degree*: the tier exists for the
+    hub vertices zipf traffic concentrates on, and the arithmetic keeps
+    the cold tail out of their way.
+    """
+
+    budget_bytes: int      # resident cap, EngineShare-style byte budget
+    min_degree: int        # below: BYPASS the tier (cold tail)
+    pin_degree: int        # at/above: PIN (the clock sweep never takes it)
+    pin_fraction: float    # budget fraction pinned entries may occupy
+    place: str             # "device" (HBM int32 runs) | "host" (numpy)
+    prefetch_min_hits: int  # trace hits before a vertex is predicted hot
+    prefetch_batch: int    # predicted vertices fetched per request batch
+    reason: str
+
+    @property
+    def device(self) -> bool:
+        return self.place == "device"
+
+
+def choose_hotset_admission(n_vertices: int, n_edges: int,
+                            budget_bytes: int, *,
+                            pin_fraction: float = 0.5,
+                            prefetch_min_hits: int = 3,
+                            prefetch_batch: int = 8) -> HotSetPlan:
+    """Degree-aware admission for the device-resident hot-set tier.
+
+    Power-law graphs put almost all query traffic on vertices whose
+    degree is a large multiple of the mean ("Making Caches Work for
+    Graph Analytics": frequency-clustered hot sets), while the tail —
+    most vertices — is touched rarely and decodes cheaply anyway.  The
+    thresholds follow directly:
+
+    * ``min_degree = max(2, 2 * mean_degree)`` — an entry below twice
+      the mean is tail, not hub: admitting it spends budget (and an
+      eviction later) to save a decode that was already near-free, and
+      Slim Graph's lossy-tier argument applies one tier down — let the
+      tail fall through to PG-Fuse;
+    * ``pin_degree = max(min_degree, 16 * mean_degree)`` — an order of
+      magnitude above the mean the re-reference probability under zipf
+      traffic is ~1 per batch, so second-chance bookkeeping is wasted
+      motion: pin it (up to ``pin_fraction`` of the budget) and let the
+      clock sweep manage only the warm middle;
+    * ``place`` mirrors :func:`choose_query_decode`'s lane constraint:
+      ids fit the device's int32 lanes only while ``|V| <= 2^31``, so
+      larger graphs keep the tier host-resident (still skipping decode
+      — just not the H2D).
+    """
+    if n_vertices < 0 or n_edges < 0:
+        raise ValueError("n_vertices and n_edges must be >= 0")
+    if budget_bytes < 1:
+        raise ValueError(f"budget_bytes must be >= 1, got {budget_bytes}")
+    if not 0.0 <= pin_fraction <= 1.0:
+        raise ValueError(f"pin_fraction must be in [0, 1], "
+                         f"got {pin_fraction}")
+    mean = n_edges / n_vertices if n_vertices else 0.0
+    min_degree = max(2, int(2 * mean))
+    pin_degree = max(min_degree, int(16 * mean))
+    place = "device" if n_vertices <= (1 << 31) else "host"
+    return HotSetPlan(
+        budget_bytes=int(budget_bytes),
+        min_degree=min_degree, pin_degree=pin_degree,
+        pin_fraction=float(pin_fraction), place=place,
+        prefetch_min_hits=int(prefetch_min_hits),
+        prefetch_batch=int(prefetch_batch),
+        reason=f"mean degree {mean:.1f}: bypass < {min_degree}, pin >= "
+               f"{pin_degree} (<= {pin_fraction:.0%} of {budget_bytes} B); "
+               f"{place}-resident runs "
+               f"({'ids fit int32 lanes' if place == 'device' else 'ids overflow int32 lanes'})")
+
+
 def choose_stream_parts(n_devices_total: int = 1, process_count: int = 1,
                         min_parts_per_process: int = 8) -> int:
     """Global partition count for a (possibly multi-host) streamed load.

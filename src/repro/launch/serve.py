@@ -83,7 +83,8 @@ def make_gnn_server(arch_id: str, cfg, workdir: str, *,
                     fanouts=(5, 5), use_pgfuse: bool = True,
                     seed: int = 0, decode: str = "auto",
                     fs=None, engine_name: str = None,
-                    engine_budget: int = None):
+                    engine_budget: int = None,
+                    hotset_bytes: int = None):
     """Build the end-to-end GNN inference server over CompBin storage.
 
     Returns ``(answer, engine, close)``: ``answer(vertex_ids)`` runs one
@@ -107,6 +108,12 @@ def make_gnn_server(arch_id: str, cfg, workdir: str, *,
     ``engine_budget`` and this server's files join ONE
     :class:`~repro.core.pgfuse.EngineShare` — several models then serve
     from one budget without evicting each other's warm sets.
+
+    ``hotset_bytes`` adds the HBM-resident hot-set tier
+    (:class:`repro.query.HotSetCache`, sized by
+    :func:`repro.core.policy.choose_hotset_admission`): hub
+    neighborhoods are answered from resident decoded runs and skip the
+    packed-byte path entirely, byte-identically (docs/architecture.md).
     """
     import jax
 
@@ -145,7 +152,7 @@ def make_gnn_server(arch_id: str, cfg, workdir: str, *,
                                      pgfuse_file_budget=churn_cap,
                                      pgfuse_file_readahead=0,
                                      pgfuse_engine=share)
-    engine = NeighborQueryEngine(g, decode=decode)
+    engine = NeighborQueryEngine(g, decode=decode, hotset=hotset_bytes)
     sampler = NeighborSampler(engine, fanouts=fanouts, seed=seed)
     mod = _GNN_MODULES[arch_id]
     params = mod.init_params(cfg, jax.random.key(0))
@@ -174,7 +181,8 @@ def make_traversal_server(workdir: str, *, decode: str = "auto",
                           edge_budget: int = 1 << 16,
                           service_edges_per_s: float = 5.0e6,
                           servers: int = 2, seed: int = 1,
-                          shards: int = 1, replication: int = 1):
+                          shards: int = 1, replication: int = 1,
+                          hotset_bytes: int = None):
     """The traversal request type next to GNN inference: a
     :class:`repro.query.TraversalService` over the SAME CompBin bytes
     (and the same random-access PG-Fuse policy) the inference server
@@ -196,6 +204,11 @@ def make_traversal_server(workdir: str, *, decode: str = "auto",
     (``service_edges_per_s * shards`` across ``servers * shards``
     executors).  Traversal answers stay byte-identical to ``shards=1``
     (see docs/sharded_serving.md).
+
+    ``hotset_bytes`` gives each engine (the single backend, or every
+    shard replica) an HBM-resident hot-set tier of that byte budget —
+    frontier hub vertices then skip the storage gather
+    (docs/architecture.md).
     """
     from repro.core import paragrapher, policy
     from repro.launch.data_gnn import ensure_gnn_assets
@@ -211,6 +224,7 @@ def make_traversal_server(workdir: str, *, decode: str = "auto",
         # budget one mount would have had (the locality the split buys)
         backend = ShardedQueryService(
             gp, n_shards=shards, replication=replication, decode=decode,
+            hotset_bytes=hotset_bytes,
             open_kwargs=dict(
                 pgfuse_block_size=block_size,
                 pgfuse_max_resident_bytes=max(
@@ -225,7 +239,7 @@ def make_traversal_server(workdir: str, *, decode: str = "auto",
             gp, use_pgfuse=True, pgfuse_block_size=block_size,
             pgfuse_readahead=amode.readahead, pgfuse_eviction=amode.eviction,
             pgfuse_max_resident_bytes=256 * block_size)
-        engine = NeighborQueryEngine(g, decode=decode)
+        engine = NeighborQueryEngine(g, decode=decode, hotset=hotset_bytes)
         backend = engine
         plan = policy.choose_admission(
             slo_s, edge_budget=edge_budget,
@@ -245,14 +259,16 @@ def make_traversal_server(workdir: str, *, decode: str = "auto",
 
 
 def serve_traversal(*, n_requests: int, batch: int, workdir: str,
-                    shards: int = 1, replication: int = 1) -> None:
+                    shards: int = 1, replication: int = 1,
+                    hotset_bytes: int = None) -> None:
     """Synthetic zipf traversal traffic against
     :func:`make_traversal_server`: k-hop neighborhoods, bounded BFS
     visits and shortest paths over hub-biased seeds."""
     from repro.query import TraversalShed
 
     service, close = make_traversal_server(workdir, shards=shards,
-                                           replication=replication)
+                                           replication=replication,
+                                           hotset_bytes=hotset_bytes)
     try:
         n = service.n_vertices
         rng = np.random.default_rng(0)
@@ -283,12 +299,19 @@ def serve_traversal(*, n_requests: int, batch: int, workdir: str,
                  100 * st.shed_rate, st.frontier_batches,
                  st.edges_scanned, qs.dedup_ratio, qs.device_batches,
                  qs.batches)
+        hs = service.as_dict().get("hotset")
+        if hs:
+            log.info("hot set: hit rate %.2f (%d/%d lookups), "
+                     "%d resident entries (%.1f KiB), %d pinned",
+                     hs["hit_rate"], hs["hits"], hs["lookups"],
+                     hs["resident_entries"], hs["resident_bytes"] / 1024,
+                     hs["pinned"])
     finally:
         close()
 
 
 def serve_gnn(arch_id: str, cfg, *, batch: int, n_requests: int,
-              workdir: str) -> None:
+              workdir: str, hotset_bytes: int = None) -> None:
     """Synthetic user-inference traffic against :func:`make_gnn_server`.
 
     Requests draw vertices zipf-style (a hot head, like real user
@@ -296,7 +319,8 @@ def serve_gnn(arch_id: str, cfg, *, batch: int, n_requests: int,
     ratio and cache hit rate below are the quantities the engine exists
     to maximize.
     """
-    answer, engine, close = make_gnn_server(arch_id, cfg, workdir)
+    answer, engine, close = make_gnn_server(arch_id, cfg, workdir,
+                                            hotset_bytes=hotset_bytes)
     try:
         n = engine.n_vertices
         rng = np.random.default_rng(0)
@@ -323,6 +347,13 @@ def serve_gnn(arch_id: str, cfg, *, batch: int, n_requests: int,
                  len(lat_ms), st.dedup_ratio, st.blocks_touched,
                  st.coalesced_reads, hit, st.device_batches, st.batches,
                  st.bytes_h2d / 1024, st.close_reasons)
+        if engine.hotset is not None:
+            hs = engine.hotset.stats
+            log.info("hot set: hit rate %.2f (%d/%d lookups), "
+                     "%d resident entries (%.1f KiB), %d pinned",
+                     hs.hit_rate, hs.hits, hs.lookups,
+                     hs.resident_entries, hs.resident_bytes / 1024,
+                     hs.pinned)
     finally:
         close()
 
@@ -348,6 +379,11 @@ def main() -> None:
     ap.add_argument("--replication", type=int, default=1,
                     help="replicas per shard for --traversal serving "
                          "(round-robin load balancing + failover)")
+    ap.add_argument("--hotset-bytes", type=int, default=None,
+                    help="byte budget for the HBM-resident hot-set tier "
+                         "of decoded hub runs (gnn/traversal serving; "
+                         "default: no hot set). Admission is degree-"
+                         "aware — see policy.choose_hotset_admission")
     args = ap.parse_args()
 
     spec = get_arch(args.arch)
@@ -358,7 +394,8 @@ def main() -> None:
                              "gnn arch for its graph assets")
         serve_traversal(n_requests=args.requests, batch=args.batch,
                         workdir=args.workdir, shards=args.shards,
-                        replication=args.replication)
+                        replication=args.replication,
+                        hotset_bytes=args.hotset_bytes)
         return
     if spec.family == "lm":
         serve_lm(cfg, batch=args.batch, prompt_len=args.prompt_len,
@@ -367,7 +404,8 @@ def main() -> None:
         serve_din(cfg, batch=args.batch, n_requests=args.requests)
     elif spec.family == "gnn":
         serve_gnn(args.arch, cfg, batch=args.batch,
-                  n_requests=args.requests, workdir=args.workdir)
+                  n_requests=args.requests, workdir=args.workdir,
+                  hotset_bytes=args.hotset_bytes)
     else:
         raise SystemExit(f"unknown family {spec.family!r}")
 

@@ -1,6 +1,23 @@
+"""Random-access serving stack over CompBin + PG-Fuse.
+
+One package, every serving layer: the batched
+:class:`NeighborQueryEngine` (dedup -> coalesced gathers -> host/device
+eq. (1) decode), the HBM-resident :class:`HotSetCache` tier above it
+(decoded hub runs, degree-aware admission, trace-driven prefetch), the
+:class:`TraversalService` (k-hop/BFS/path, one engine batch per
+frontier, admission-gated), the scatter-gather
+:class:`ShardedQueryService` (per-shard engines + mounts, replicated
+routing), and the deterministic virtual-clock :class:`LoadGenerator`.
+The end-to-end picture — including the three-tier cache hierarchy
+(storage blocks / host-RAM PG-Fuse / HBM hot set) — lives in
+``docs/architecture.md``.
+"""
+
 from repro.query.engine import (DECODE_MODES,  # noqa: F401
                                 NeighborQueryEngine, QueryFuture, QueryStats,
                                 gather_rows, merge_query_stats)
+from repro.query.hotset import (BYTES_PER_EDGE, HotSetCache,  # noqa: F401
+                                HotSetStats, merge_hotset_stats)
 from repro.query.loadgen import (LoadGenerator, LoadReport,  # noqa: F401
                                  default_cost_fn)
 from repro.query.sharded import (RouterStats, ShardReplica,  # noqa: F401

@@ -24,6 +24,16 @@ The engine turns that property into a serving-grade query path:
   (:class:`repro.query.window.AdaptiveWindow`) closes the batch EARLY
   the moment the pending dedup ratio stops improving — waiting only
   pays while concurrent traffic overlaps;
+* an optional **device-resident hot-set tier**
+  (:class:`repro.query.hotset.HotSetCache`, ``hotset=``) sits ABOVE the
+  gather: decoded neighbor runs of hub vertices stay resident in HBM
+  under a byte budget with degree-aware admission
+  (:func:`repro.core.policy.choose_hotset_admission` — pin hubs, bypass
+  the cold tail), so a hot hit touches neither storage nor the PG-Fuse
+  block cache nor the decoder, and trace-driven prefetch fetches
+  predicted-hot vertices after each batch, outside any request's
+  latency — hot answers are byte-identical to every decode path (the
+  differential fuzzers assert it);
 * :class:`QueryStats` accounts every request: virtual-clock latency
   percentiles (p50/p99 under an injectable ``clock``, so benchmarks
   measure the *request pattern* against a simulated storage clock, not
@@ -34,6 +44,8 @@ PG-Fuse should be mounted in the **random-access mode**
 (:func:`repro.core.policy.choose_access_mode`): readahead off — the next
 sequential block is NOT more likely to be needed — and clock/second-
 chance eviction so the hot offset blocks survive packed-byte churn.
+The full three-tier hierarchy (storage blocks / host-RAM PG-Fuse / HBM
+hot set) is laid out in ``docs/architecture.md``.
 """
 
 from __future__ import annotations
@@ -277,6 +289,7 @@ class NeighborQueryEngine:
                  adaptive_window: bool = True,
                  window_patience: int = 2,
                  window_min_overlap: float = 0.05,
+                 hotset=None,
                  clock: Callable[[], float] = time.perf_counter):
         if graph.format != FORMAT_COMPBIN:
             raise ValueError(
@@ -306,6 +319,21 @@ class NeighborQueryEngine:
                             else 1 << 20)
         self.merge_gap = (int(merge_gap) if merge_gap is not None
                           else self._block_size)
+        # the optional HBM-resident tier above the gather: an int is a
+        # byte budget (admission sized by policy from THIS graph's mean
+        # degree), a HotSetCache/HotSetPlan is used as given
+        self._hotset = None
+        if hotset is not None:
+            from repro.core.policy import HotSetPlan
+            from repro.query.hotset import HotSetCache
+            if isinstance(hotset, HotSetCache):
+                self._hotset = hotset
+            elif isinstance(hotset, HotSetPlan):
+                self._hotset = HotSetCache(plan=hotset)
+            else:
+                plan = _policy.choose_hotset_admission(
+                    graph.n_vertices, self._header.n_edges, int(hotset))
+                self._hotset = HotSetCache(plan=plan)
         self.stats = QueryStats()
         # per-batch folds share the stats object's OWN lock, so an
         # external stats.reset()/as_dict() is atomic against them
@@ -336,6 +364,12 @@ class NeighborQueryEngine:
     @property
     def graph(self) -> GraphHandle:
         return self._graph
+
+    @property
+    def hotset(self):
+        """The device-resident hot-set tier, or None (see
+        :mod:`repro.query.hotset`)."""
+        return self._hotset
 
     # -- the coalesced fetch core ------------------------------------------
     @staticmethod
@@ -478,21 +512,54 @@ class NeighborQueryEngine:
                 f"[{vertices.min()}, {vertices.max()}]")
         t0 = self._clock()
         uniq, inverse = np.unique(vertices, return_inverse=True)
-        f, own = self._open()
-        try:
-            spans, off_reads, off_ranges = self._gather_offsets(uniq, f)
-            packed, nbr_reads, nbr_ranges = self._gather_packed(spans, f)
-        finally:
-            if own:
-                f.close()
-        # placement per batch: edge mass is exact here (offsets gathered,
-        # nothing decoded yet)
-        n_edges = int((spans[:, 1] - spans[:, 0]).sum()) if len(spans) else 0
-        plan = self._decode_plan(n_edges)
-        if plan.device:
-            decoded, bytes_h2d = self._decode_device(packed)
+        # tier-3 lookup FIRST: a hot vertex touches neither storage nor
+        # the PG-Fuse block cache nor the decoder below
+        hot: dict = {}
+        if self._hotset is not None:
+            hot = self._hotset.lookup(uniq)
+            self._hotset.observe(uniq)
+        if hot:
+            cold = uniq[np.fromiter((int(v) not in hot for v in uniq),
+                                    bool, len(uniq))]
         else:
-            decoded, bytes_h2d = self._decode_host(packed)
+            cold = uniq
+        off_reads = nbr_reads = 0
+        off_ranges: List[tuple] = []
+        nbr_ranges: List[tuple] = []
+        decoded_cold: List[np.ndarray] = []
+        bytes_h2d = 0
+        on_device = 0
+        if cold.size:
+            f, own = self._open()
+            try:
+                spans, off_reads, off_ranges = \
+                    self._gather_offsets(cold, f)
+                packed, nbr_reads, nbr_ranges = \
+                    self._gather_packed(spans, f)
+            finally:
+                if own:
+                    f.close()
+            # placement per batch: edge mass is exact here (offsets
+            # gathered, nothing decoded yet)
+            n_edges = int((spans[:, 1] - spans[:, 0]).sum()) \
+                if len(spans) else 0
+            plan = self._decode_plan(n_edges)
+            if plan.device:
+                decoded_cold, bytes_h2d = self._decode_device(packed)
+            else:
+                decoded_cold, bytes_h2d = self._decode_host(packed)
+            on_device = int(plan.device)
+        if self._hotset is not None:
+            # fills are free for the caller: the decode already happened
+            # (admission keeps the cold tail out — see hotset.fill)
+            for v, d in zip(cold, decoded_cold):
+                self._hotset.fill(int(v), d)
+        if hot:
+            it = iter(decoded_cold)
+            decoded = [hot[int(v)] if int(v) in hot else next(it)
+                       for v in uniq]
+        else:
+            decoded = decoded_cold
         result = [decoded[j] for j in inverse]
         latency = self._clock() - t0
         touched = _blocks_of(off_ranges + nbr_ranges, self._block_size)
@@ -505,14 +572,39 @@ class NeighborQueryEngine:
             st.blocks_touched += len(touched)
             st.bytes_gathered += sum(e - s for s, e in off_ranges + nbr_ranges)
             st.edges_returned += sum(len(d) for d in result)
-            st.device_batches += plan.device
+            st.device_batches += on_device
             st.bytes_h2d += bytes_h2d
             st.close_reasons[_close_reason] = \
                 st.close_reasons.get(_close_reason, 0) + 1
             st.latencies_s.append(latency)
             if len(st.latencies_s) > LATENCY_WINDOW:
                 del st.latencies_s[0]
+        if self._hotset is not None:
+            # trace-driven prefetch AFTER the request is answered and its
+            # latency folded: predicted-hot vertices warm the tier on the
+            # engine's time, not any caller's
+            self._hotset_prefetch()
         return result
+
+    def _hotset_prefetch(self) -> None:
+        """Fetch + decode the tier's predicted-hot candidates and offer
+        them back as prefetch fills.  Runs the same gather core as the
+        request path (merged ranges, span announcement) but folds into
+        :class:`~repro.query.hotset.HotSetStats` only — prefetch is the
+        tier warming itself, not request traffic."""
+        cand = np.sort(self._hotset.prefetch_candidates())
+        if cand.size == 0:
+            return
+        f, own = self._open()
+        try:
+            spans, _, _ = self._gather_offsets(cand, f)
+            packed, _, _ = self._gather_packed(spans, f)
+        finally:
+            if own:
+                f.close()
+        decoded, _ = self._decode_host(packed)
+        for v, d in zip(cand, decoded):
+            self._hotset.fill(int(v), d, prefetch=True)
 
     def neighbors_batch_ragged(self, vertices) -> tuple:
         """Ragged (CSR-shard) form of :meth:`neighbors_batch`: returns

@@ -44,7 +44,17 @@ serving process toward that topology:
   :meth:`~repro.query.QueryStats.merge`, so per-shard sums equal
   service totals by construction (conservation pinned by
   :attr:`ShardedQueryService.conserved`), and the service-level
-  :class:`RouterStats` reconciles routed vertex counts against them.
+  :class:`RouterStats` reconciles routed vertex counts against them;
+* **per-shard hot sets** — ``hotset_bytes=`` gives every shard replica
+  its own HBM-resident :class:`~repro.query.hotset.HotSetCache` above
+  its engine (admission sized per shard by
+  :func:`repro.core.policy.choose_hotset_admission`); a shard's hot
+  set only ever holds ITS range's hubs — the same per-shard locality
+  the split cache budgets buy, one tier up — and
+  :meth:`ShardedQueryService.hotset_stats` /
+  :meth:`~ShardedQueryService.per_shard_hotset_stats` fold the tiers'
+  :class:`~repro.query.hotset.HotSetStats` RouterStats-style (per-shard
+  sums equal fleet totals by the associative merge).
 
 :func:`repro.core.policy.choose_shard_plan` sizes ``n_shards`` /
 ``replication`` / ``routing`` from the file size, per-shard cache
@@ -141,6 +151,7 @@ class ShardedQueryService:
                  shares=None,
                  n_parts: Optional[int] = None,
                  decode: str = "auto",
+                 hotset_bytes: Optional[int] = None,
                  open_kwargs=None,
                  engine_kwargs=None,
                  clock: Callable[[], float] = time.perf_counter):
@@ -196,6 +207,10 @@ class ShardedQueryService:
                     e_kw = dict(ekw(s, r))
                     e_kw.setdefault("decode", decode)
                     e_kw.setdefault("clock", clock)
+                    if hotset_bytes is not None:
+                        # one hot set PER replica: each simulated process
+                        # owns its range's hubs, like its PG-Fuse mount
+                        e_kw.setdefault("hotset", int(hotset_bytes))
                     eng = NeighborQueryEngine(gh, **e_kw)
                     row.append(ShardReplica(s, r, gh, eng,
                                             *self.ranges[s]))
@@ -226,6 +241,34 @@ class ShardedQueryService:
         (replicas folded)."""
         return [merge_query_stats(rep.engine.stats for rep in row)
                 for row in self.replicas]
+
+    def hotset_stats(self):
+        """Every replica's :class:`~repro.query.hotset.HotSetStats`
+        folded into fleet totals (None when the service runs without a
+        hot-set tier)."""
+        from repro.query.hotset import merge_hotset_stats
+
+        caches = [rep.engine.hotset for row in self.replicas
+                  for rep in row if rep.engine.hotset is not None]
+        if not caches:
+            return None
+        return merge_hotset_stats(c.stats for c in caches)
+
+    def per_shard_hotset_stats(self) -> list:
+        """One merged :class:`~repro.query.hotset.HotSetStats` per shard
+        (replicas folded; None entries for shards without the tier) —
+        the hot-set analogue of ``RouterStats.routed_by_shard``:
+        per-shard sums equal :meth:`hotset_stats` totals by the
+        associative merge."""
+        from repro.query.hotset import merge_hotset_stats
+
+        out = []
+        for row in self.replicas:
+            caches = [rep.engine.hotset for rep in row
+                      if rep.engine.hotset is not None]
+            out.append(merge_hotset_stats(c.stats for c in caches)
+                       if caches else None)
+        return out
 
     @property
     def conserved(self) -> bool:

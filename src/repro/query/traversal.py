@@ -11,7 +11,11 @@ engine's whole machinery keeps paying at every hop:
   dedup, merged range reads, span prefetch and the per-batch
   host/device decode placement (``decode="auto"`` routes large
   frontiers to the Pallas kernel) all apply to the frontier as a unit,
-  never per vertex;
+  never per vertex; when the engine carries the HBM-resident hot-set
+  tier (:class:`~repro.query.hotset.HotSetCache`), the frontier's hub
+  vertices are answered from resident decoded runs and **skip the
+  storage gather entirely** — only the frontier's cold remainder
+  reaches PG-Fuse, and answers stay byte-identical either way;
 * every request carries budgets — ``max_edges`` (scanned edge budget)
   and ``max_vertices`` (visit bound) — with semantics pinned precisely
   enough that a pure in-memory CSR reference reproduces the results
@@ -589,9 +593,19 @@ class TraversalService:
         return executor.submit(_run)
 
     def as_dict(self) -> dict:
-        """Service + underlying engine accounting, one dict."""
-        return {"traversal": self.stats.as_dict(),
-                "query": self._engine.stats.as_dict()}
+        """Service + underlying engine accounting, one dict (plus the
+        hot-set tier's, when the backend carries one — a single
+        engine's cache or the sharded service's fleet fold)."""
+        out = {"traversal": self.stats.as_dict(),
+               "query": self._engine.stats.as_dict()}
+        hs = None
+        if getattr(self._engine, "hotset", None) is not None:
+            hs = self._engine.hotset.stats
+        elif hasattr(self._engine, "hotset_stats"):
+            hs = self._engine.hotset_stats()
+        if hs is not None:
+            out["hotset"] = hs.as_dict()
+        return out
 
     def close(self) -> None:
         if self._closed:

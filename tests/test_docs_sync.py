@@ -1,0 +1,94 @@
+"""Docs stay in sync with the code they describe.
+
+Two layers of protection against docs drift:
+
+* the documented ``QueryStats``/``HotSetStats`` metric tables in
+  docs/graph_query_engine.md must be a SUBSET of the real
+  ``as_dict()`` keys — renaming or dropping a counter without
+  updating the table fails tier-1, not just the CI docs lane;
+* ``.github/scripts/docs_check.py`` (paths, ``file.py::symbol``
+  anchors, dotted symbols, CLI flags across all of docs/ + README)
+  must come back clean when run against the working tree.
+"""
+
+import importlib.util
+import re
+from pathlib import Path
+
+import numpy as np
+
+from repro.query.engine import QueryStats
+from repro.query.hotset import HotSetStats
+
+ROOT = Path(__file__).resolve().parents[1]
+ENGINE_DOC = ROOT / "docs" / "graph_query_engine.md"
+
+
+def _table_keys(section_heading: str) -> set:
+    """Backticked tokens from the first column of the table under a heading."""
+    text = ENGINE_DOC.read_text()
+    m = re.search(rf"^## {re.escape(section_heading)}.*?(?=^## |\Z)",
+                  text, flags=re.S | re.M)
+    assert m, f"section {section_heading!r} missing from {ENGINE_DOC.name}"
+    keys = set()
+    for line in m.group(0).splitlines():
+        if not line.startswith("|"):
+            continue
+        first_cell = line.split("|")[1]
+        keys.update(re.findall(r"`(\w+)`", first_cell))
+    assert keys, f"no table rows found under {section_heading!r}"
+    return keys
+
+
+def test_querystats_table_is_subset_of_as_dict():
+    documented = _table_keys("QueryStats: the engine's accounting contract")
+    real = set(QueryStats().as_dict().keys())
+    missing = documented - real
+    assert not missing, (
+        f"docs/graph_query_engine.md documents QueryStats keys that "
+        f"as_dict() no longer returns: {sorted(missing)}"
+    )
+    # the table is the *serving contract*: the load-bearing counters
+    # must actually be documented, not just not-wrong
+    for key in ("requests", "batches", "close_reasons", "device_batches",
+                "p50_s", "p99_s"):
+        assert key in documented, f"contract key {key!r} undocumented"
+
+
+def test_querystats_as_dict_matches_live_engine_fold():
+    # the documented invariant: sum(close_reasons.values()) == batches
+    s = QueryStats()
+    s.batches = 3
+    s.close_reasons = {"full": 2, "flush": 1}
+    d = s.as_dict()
+    assert sum(d["close_reasons"].values()) == d["batches"]
+    # merge associativity over the documented keys
+    a, b = QueryStats(requests=5), QueryStats(requests=7)
+    assert a.merge(b).as_dict()["requests"] == 12
+
+
+def test_hotset_stats_documented_contract_holds():
+    documented_doc = ENGINE_DOC.read_text()
+    assert "HotSetStats" in documented_doc
+    s = HotSetStats()
+    s.lookups, s.hits, s.misses = 4, 3, 1
+    s.fills, s.admitted, s.bypassed, s.rejected = 5, 2, 2, 1
+    assert s.conserved
+    keys = set(s.as_dict().keys())
+    for key in ("lookups", "hits", "misses", "fills", "admitted",
+                "bypassed", "rejected", "resident_bytes", "pinned"):
+        assert key in keys
+
+
+def test_docs_check_script_is_clean():
+    spec = importlib.util.spec_from_file_location(
+        "docs_check", ROOT / ".github" / "scripts" / "docs_check.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    assert mod.main() == 0, "dangling references in docs/ (see stdout)"
+
+
+def test_readme_tier1_command_is_current():
+    readme = (ROOT / "README.md").read_text()
+    assert "PYTHONPATH=src python -m pytest -x -q" in readme
+    assert "docs/architecture.md" in readme

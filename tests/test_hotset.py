@@ -1,0 +1,380 @@
+"""Hot-set tier unit + integration suite (cache tier 3).
+
+Everything here is deterministic — admission, eviction order and
+prefetch predictions are pure functions of the call sequence — so the
+churn scenarios replay exactly: the degree-pinned hub must survive an
+arbitrary amount of warm-middle churn, the cold tail must never enter,
+the clock sweep must honor second chances, and the engine-integrated
+tier must answer byte-identically to the plain packed-byte path
+(including while storage faults hit the fill path).  The adversarial
+byte-identity proof lives in the differential fuzzers
+(tests/test_serving_differential.py, tests/test_sharded_differential.py,
+tests/test_traversal_differential.py — each runs a hot-set arm); this
+file pins the tier's MECHANISMS.
+"""
+
+import errno
+
+import numpy as np
+import pytest
+
+from repro.core import paragrapher, policy
+from repro.graph import rmat
+from repro.query import (BYTES_PER_EDGE, HotSetCache, HotSetStats,
+                         NeighborQueryEngine, ShardedQueryService,
+                         merge_hotset_stats)
+from tests.conftest import FaultyStorage
+
+
+def _run(v: int, degree: int) -> np.ndarray:
+    """A recognizable synthetic decoded run for vertex ``v``."""
+    return (np.arange(degree, dtype=np.int64) + 7 * v) % (1 << 20)
+
+
+def _cache(budget_edges: int, *, min_degree=4, pin_degree=64,
+           place="host", **kw) -> HotSetCache:
+    return HotSetCache(budget_bytes=budget_edges * BYTES_PER_EDGE,
+                       min_degree=min_degree, pin_degree=pin_degree,
+                       place=place, **kw)
+
+
+# -- policy ----------------------------------------------------------------
+
+def test_choose_hotset_admission_thresholds():
+    """Thresholds scale from the mean degree; placement follows the
+    int32 lane constraint; bad inputs raise."""
+    p = policy.choose_hotset_admission(1000, 16000, 1 << 20)
+    assert p.min_degree == 32 and p.pin_degree == 256
+    assert p.place == "device" and p.device
+    assert "mean degree 16.0" in p.reason
+    # sparse graph: the floor keeps degree-1 tail out even at mean ~1
+    p = policy.choose_hotset_admission(1000, 900, 1 << 20)
+    assert p.min_degree == 2
+    # beyond int32 lanes the tier degrades to host placement
+    p = policy.choose_hotset_admission((1 << 31) + 1, 1 << 33, 1 << 20)
+    assert p.place == "host" and not p.device
+    with pytest.raises(ValueError, match="budget_bytes"):
+        policy.choose_hotset_admission(10, 10, 0)
+    with pytest.raises(ValueError, match="pin_fraction"):
+        policy.choose_hotset_admission(10, 10, 1, pin_fraction=1.5)
+    with pytest.raises(ValueError, match=">= 0"):
+        policy.choose_hotset_admission(-1, 10, 1)
+
+
+def test_cache_constructor_validation():
+    with pytest.raises(ValueError, match="plan= or budget_bytes="):
+        HotSetCache()
+    with pytest.raises(ValueError, match="budget_bytes"):
+        HotSetCache(budget_bytes=0)
+    with pytest.raises(ValueError, match="place"):
+        HotSetCache(budget_bytes=1, place="tpu")
+    with pytest.raises(ValueError, match="pin_fraction"):
+        HotSetCache(budget_bytes=1, pin_fraction=-0.1)
+    # explicit kwargs override plan fields
+    plan = policy.choose_hotset_admission(100, 1600, 1 << 20)
+    c = HotSetCache(plan=plan, min_degree=1, place="host")
+    assert c.plan.min_degree == 1 and c.plan.place == "host"
+    assert c.plan.budget_bytes == 1 << 20
+
+
+# -- admission / eviction churn (deterministic virtual clock) --------------
+
+def test_degree_pinned_hub_survives_churn_and_cold_tail_bypasses():
+    """The churn scenario from the admission design: one pinned hub, a
+    stream of warm-middle entries far over budget, and a cold tail.
+    After arbitrary churn the hub is still resident (the sweep never
+    takes pinned entries), the middle saw real evictions, and no
+    cold-tail vertex ever became resident."""
+    cache = _cache(budget_edges=1000, min_degree=4, pin_degree=64)
+    assert cache.fill(0, _run(0, 100))          # the hub: pinned
+    assert cache.is_pinned(0)
+    # cold tail: degree < min_degree bypasses, never admitted
+    for v in range(1000, 1040):
+        assert not cache.fill(v, _run(v, 3))
+    # warm middle: 90 entries x 20 edges = 1800 edges >> remaining budget
+    for v in range(1, 91):
+        cache.fill(v, _run(v, 20))
+    st = cache.stats
+    assert st.evicted > 0, "churn must exceed the budget"
+    assert cache.is_pinned(0), "pinned hub evicted by churn"
+    resident = set(cache.resident_vertices.tolist())
+    assert 0 in resident
+    assert not (resident & set(range(1000, 1040))), "cold tail leaked in"
+    assert st.bypassed == 40
+    assert st.conserved
+    assert st.resident_bytes <= cache.plan.budget_bytes
+    # the hub's bytes stayed charged the whole time
+    assert st.resident_bytes >= 100 * BYTES_PER_EDGE
+    # lookups answer the hub byte-identically after all that churn
+    got = cache.lookup(np.array([0], dtype=np.int64))
+    assert np.array_equal(got[0], _run(0, 100))
+    assert got[0].dtype == np.int64
+
+
+def test_clock_sweep_gives_second_chances():
+    """PG-Fuse's ``eviction="clock"`` semantics lifted to decoded runs:
+    a fresh fill carries a set reference bit (one churn round of grace),
+    so the FIRST over-budget sweep clears the round and takes the
+    entry at the hand — and after that, only a re-touched entry's bit
+    is set again, so the next sweep evicts an un-touched survivor, not
+    the re-referenced one."""
+    cache = _cache(budget_edges=48, min_degree=4, pin_degree=1 << 62)
+    for v in (1, 2, 3):
+        assert cache.fill(v, _run(v, 16))
+    # sweep 1: clears every fresh bit, then evicts at the hand (1)
+    assert cache.fill(4, _run(4, 16))
+    assert set(cache.resident_vertices.tolist()) == {2, 3, 4}
+    # re-touch 2 only; 3's bit stays clear from sweep 1
+    cache.lookup(np.array([2], dtype=np.int64))
+    # sweep 2: the un-touched 3 is the victim, the re-touched 2 survives
+    assert cache.fill(5, _run(5, 16))
+    resident = set(cache.resident_vertices.tolist())
+    assert resident == {2, 4, 5}, resident
+    assert cache.stats.evicted == 2
+    assert np.array_equal(cache.lookup(np.array([2]))[2], _run(2, 16))
+
+
+def test_oversized_and_unmakeable_room_rejected():
+    """A run larger than the whole budget is rejected outright; an
+    admissible run is rejected when everything resident is pinned."""
+    cache = _cache(budget_edges=100, min_degree=2, pin_degree=8,
+                   pin_fraction=1.0)
+    assert not cache.fill(1, _run(1, 101))           # > budget
+    assert cache.stats.rejected == 1
+    assert cache.fill(2, _run(2, 90))                # pinned (deg >= 8)
+    assert not cache.fill(3, _run(3, 20))            # no unpinned victim
+    assert cache.stats.rejected == 2
+    assert cache.stats.conserved
+
+
+def test_pin_fraction_caps_pinned_bytes():
+    """Beyond ``pin_fraction`` of the budget a hub is still admitted —
+    just unpinned (evictable), so pins can never starve the warm
+    middle."""
+    cache = _cache(budget_edges=100, min_degree=2, pin_degree=10,
+                   pin_fraction=0.5)
+    assert cache.fill(1, _run(1, 40))     # pinned: 40 <= 50 edges worth
+    assert cache.fill(2, _run(2, 40))     # would breach the cap: unpinned
+    assert cache.is_pinned(1) and not cache.is_pinned(2)
+    assert cache.stats.pinned == 1
+
+
+def test_clear_drops_entries_keeps_flow_history():
+    cache = _cache(budget_edges=100)
+    cache.fill(1, _run(1, 10))
+    cache.lookup(np.array([1]))
+    cache.clear()
+    assert cache.resident_bytes == 0
+    assert cache.resident_vertices.size == 0
+    st = cache.stats
+    assert st.hits == 1 and st.fills == 1          # history survives
+    assert st.resident_entries == 0 and st.pinned == 0
+
+
+# -- stats -----------------------------------------------------------------
+
+def test_stats_merge_associative_and_conserved():
+    a = HotSetStats(lookups=10, hits=7, misses=3, fills=5, admitted=3,
+                    bypassed=1, rejected=1, evicted=2, pinned=1,
+                    prefetch_fills=1, hit_edges=70, resident_bytes=800,
+                    resident_entries=1)
+    b = HotSetStats(lookups=4, hits=1, misses=3, fills=2, admitted=1,
+                    bypassed=1, evicted=1, hit_edges=9,
+                    resident_bytes=80, resident_entries=1)
+    c = HotSetStats(lookups=1, misses=1)
+    ab_c = a.merge(b).merge(c)
+    a_bc = a.merge(b.merge(c))
+    assert ab_c.as_dict() == a_bc.as_dict()
+    assert ab_c.lookups == 15 and ab_c.hits == 8
+    assert ab_c.resident_bytes == 880
+    assert ab_c.conserved
+    folded = merge_hotset_stats([a, b, c])
+    assert folded.as_dict() == ab_c.as_dict()
+    assert merge_hotset_stats([]).lookups == 0
+    d = a.as_dict()
+    assert d["hit_rate"] == 0.7
+    assert "_lock" not in d
+
+
+def test_stats_reset_keeps_resident_gauges():
+    st = HotSetStats(lookups=5, hits=2, misses=3, resident_bytes=640,
+                     resident_entries=2, pinned=1)
+    snap = st.reset()
+    assert snap.lookups == 5                       # pre-reset snapshot
+    assert st.lookups == 0 and st.hits == 0
+    assert st.resident_bytes == 640 and st.resident_entries == 2
+    assert st.pinned == 1                          # gauges survive
+
+
+# -- trace-driven prefetch -------------------------------------------------
+
+def test_prefetch_predicts_hot_and_never_refetches_bypassed():
+    """A vertex seen ``prefetch_min_hits`` times becomes a candidate
+    exactly once; a candidate whose run turned out cold-tail (bypassed
+    fill) is never handed out again — but an ADMITTED candidate that is
+    later evicted becomes predictable again."""
+    cache = _cache(budget_edges=100, min_degree=4,
+                   prefetch_min_hits=2, prefetch_batch=4)
+    ids = np.array([5, 9], dtype=np.int64)
+    cache.observe(ids)
+    assert cache.prefetch_candidates().size == 0    # 1 hit < min_hits
+    cache.observe(ids)
+    cand = cache.prefetch_candidates()
+    assert set(cand.tolist()) == {5, 9}
+    assert cache.prefetch_candidates().size == 0    # marked attempted
+    # 5 turns out cold tail -> bypassed; more observations, still silent
+    assert not cache.fill(5, _run(5, 2), prefetch=True)
+    cache.observe(ids), cache.observe(ids)
+    assert cache.prefetch_candidates().size == 0
+    # 9 is admitted; evict it by filling over budget -> predictable again
+    assert cache.fill(9, _run(9, 10), prefetch=True)
+    assert cache.stats.prefetch_fills == 1
+    cache.fill(50, _run(50, 95))
+    assert 9 not in set(cache.resident_vertices.tolist())
+    cache.observe(ids)
+    assert 9 in set(cache.prefetch_candidates().tolist())
+
+
+def test_prefetch_frequency_window_decays():
+    """Observations older than HISTORY_WINDOW distinct folds decay: a
+    vertex hot long ago is not predicted forever."""
+    from repro.query.hotset import HISTORY_WINDOW
+    cache = _cache(budget_edges=100, prefetch_min_hits=2, prefetch_batch=4)
+    cache.observe(np.array([7, 7], dtype=np.int64))
+    # flood the window with distinct ids until 7's observations age out
+    filler = np.arange(10_000, 10_000 + HISTORY_WINDOW, dtype=np.int64)
+    cache.observe(filler)
+    assert 7 not in set(cache.prefetch_candidates().tolist())
+
+
+# -- engine integration ----------------------------------------------------
+
+@pytest.fixture()
+def graph_path(tmp_path):
+    csr = rmat(9, 8, seed=3)
+    gp = str(tmp_path / "g.cbin")
+    paragrapher.save_graph(gp, csr, format="compbin")
+    return gp, csr
+
+
+def _open(gp):
+    return paragrapher.open_graph(gp, use_pgfuse=True,
+                                  pgfuse_block_size=512,
+                                  pgfuse_readahead=0,
+                                  pgfuse_eviction="clock")
+
+
+def test_engine_hotset_byte_identity_hits_and_placement(graph_path):
+    """Engine-level integration on a hub-heavy replay: the hot-set
+    engine answers byte-identically to the plain engine, actually HITS
+    on the second pass over the hubs, serves device-placed int32 runs
+    re-widened to int64, and prefetch fills land outside the request
+    accounting."""
+    gp, csr = graph_path
+    degrees = np.diff(csr.offsets)
+    hubs = np.argsort(degrees)[::-1][:16].astype(np.int64)
+    with _open(gp) as gh, _open(gp) as gc:
+        plain = NeighborQueryEngine(gh, decode="host")
+        hot = NeighborQueryEngine(
+            gc, decode="host",
+            hotset=HotSetCache(budget_bytes=1 << 18, min_degree=2,
+                               pin_degree=int(degrees.max()),
+                               place="device", prefetch_min_hits=2,
+                               prefetch_batch=4))
+        rng = np.random.default_rng(0)
+        for _ in range(6):
+            cold = rng.integers(0, csr.n_vertices, 48)
+            ids = np.where(rng.random(48) < 0.5,
+                           hubs[rng.integers(0, len(hubs), 48)], cold)
+            a = plain.neighbors_batch(ids)
+            b = hot.neighbors_batch(ids)
+            for v, x, y in zip(ids, a, b):
+                assert x.dtype == y.dtype == np.int64
+                assert np.array_equal(x, y), int(v)
+                assert np.array_equal(x, csr.neighbors_of(int(v)))
+        hs = hot.hotset.stats
+        assert hs.hits > 0 and hs.conserved
+        assert hs.resident_bytes <= hot.hotset.plan.budget_bytes
+        # both engines returned identical request accounting
+        assert plain.stats.requests == hot.stats.requests
+        # a resident hub really lives on the device as int32
+        v = int(hot.hotset.resident_vertices[0])
+        entry = hot.hotset._entries[v]
+        assert np.asarray(entry.store).dtype == np.int32
+
+
+def test_engine_builds_tier_from_int_plan_and_cache(graph_path):
+    """The ``hotset=`` kwarg accepts a byte budget (policy-sized), a
+    HotSetPlan, or a prebuilt HotSetCache."""
+    gp, csr = graph_path
+    plan = policy.choose_hotset_admission(csr.n_vertices, csr.n_edges,
+                                          1 << 16, prefetch_min_hits=2)
+    for hs in (1 << 16, plan, HotSetCache(plan=plan)):
+        with _open(gp) as g:
+            e = NeighborQueryEngine(g, decode="host", hotset=hs)
+            assert e.hotset is not None
+            assert e.hotset.plan.budget_bytes == 1 << 16
+            got = e.neighbors_batch([0, 1, 2, 1])
+            for v, nbrs in zip([0, 1, 2, 1], got):
+                assert np.array_equal(nbrs, csr.neighbors_of(v))
+    with _open(gp) as g:
+        assert NeighborQueryEngine(g).hotset is None     # default: off
+
+
+def test_hotset_fills_under_storage_faults(graph_path):
+    """Deterministic transient EIOs while the tier is FILLING (and
+    prefetching): the retry policy absorbs them, answers stay correct,
+    admitted entries hold the true decoded bytes, and the accounting
+    stays conserved."""
+    gp, csr = graph_path
+    g = paragrapher.open_graph(gp, use_pgfuse=True, pgfuse_block_size=512,
+                               pgfuse_readahead=0, pgfuse_retries=3,
+                               pgfuse_retry_backoff_s=0.0)
+    try:
+        inj = FaultyStorage()
+        for k in (1, 3, 6, 9):
+            inj.fail_at[k] = OSError(errno.EIO, "flaky OST")
+        inj.install_graph(g)
+        engine = NeighborQueryEngine(
+            g, decode="host",
+            hotset=HotSetCache(budget_bytes=1 << 16, min_degree=1,
+                               place="host", prefetch_min_hits=2,
+                               prefetch_batch=4))
+        ids = np.arange(24, dtype=np.int64)
+        for _ in range(3):                 # repeat -> hits + prefetch
+            for v, nbrs in zip(ids, engine.neighbors_batch(ids)):
+                assert np.array_equal(nbrs, csr.neighbors_of(int(v)))
+        hs = engine.hotset.stats
+        assert hs.conserved and hs.hits > 0
+        assert g.pgfuse_stats().retried_reads >= 1
+        # every resident run equals the reference bytes
+        for v in engine.hotset.resident_vertices.tolist():
+            got = engine.hotset.lookup(np.array([v]))[v]
+            assert np.array_equal(got, csr.neighbors_of(int(v)))
+    finally:
+        g.close()
+
+
+def test_sharded_per_shard_hotsets(graph_path):
+    """``hotset_bytes=`` gives every shard replica its own tier;
+    per-shard stats fold into fleet totals and answers stay identical
+    to the CSR."""
+    gp, csr = graph_path
+    with ShardedQueryService(gp, n_shards=2, hotset_bytes=1 << 16,
+                             open_kwargs=dict(pgfuse_block_size=512,
+                                              pgfuse_readahead=0)) as svc:
+        ids = np.arange(0, csr.n_vertices, 7, dtype=np.int64)
+        for _ in range(2):
+            for v, nbrs in zip(ids, svc.neighbors_batch(ids)):
+                assert np.array_equal(nbrs, csr.neighbors_of(int(v)))
+        hs = svc.hotset_stats()
+        assert hs is not None and hs.conserved
+        per = [s for s in svc.per_shard_hotset_stats() if s is not None]
+        assert len(per) == 2
+        assert sum(s.lookups for s in per) == hs.lookups
+    # without the flag the fleet has no tier to report
+    with ShardedQueryService(gp, n_shards=2,
+                             open_kwargs=dict(pgfuse_block_size=512,
+                                              pgfuse_readahead=0)) as svc:
+        assert svc.hotset_stats() is None
+        assert all(s is None for s in svc.per_shard_hotset_stats())

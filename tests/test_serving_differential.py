@@ -20,9 +20,19 @@ import pytest
 
 from repro.core import paragrapher
 from repro.graph import rmat, synthesize_node_features
-from repro.query import NeighborQueryEngine
+from repro.query import HotSetCache, NeighborQueryEngine
 from tests._prop import Draw, prop
 from tests.conftest import FaultyStorage
+
+
+def _hot_cache(draw: Draw) -> HotSetCache:
+    """A hot-set tier sized to be BUSY on Draw-scale graphs: admit from
+    degree 1 so small-degree property graphs still exercise hits,
+    fills, pins and (with the tiny budget arm) real eviction churn."""
+    return HotSetCache(budget_bytes=draw.choice([1 << 10, 1 << 16]),
+                       min_degree=1, pin_degree=draw.choice([4, 1 << 62]),
+                       place=draw.choice(["host", "device"]),
+                       prefetch_min_hits=2, prefetch_batch=4)
 
 
 def _zipf_trace(draw: Draw, n_vertices: int, n_batches: int) -> list:
@@ -78,16 +88,25 @@ def test_differential_host_device_csr(draw: Draw):
                   pgfuse_eviction=draw.choice(["lru", "clock"]),
                   pgfuse_readahead=0)
         with paragrapher.open_graph(gp, **kw) as gh, \
-                paragrapher.open_graph(gp, **kw) as gd:
+                paragrapher.open_graph(gp, **kw) as gd, \
+                paragrapher.open_graph(gp, **kw) as gs:
             engines = {
                 "host": NeighborQueryEngine(gh, decode="host"),
                 "device": NeighborQueryEngine(gd, decode="device"),
+                "hotset": NeighborQueryEngine(gs, decode="host",
+                                              hotset=_hot_cache(draw)),
             }
             _check_trace(_zipf_trace(draw, csr.n_vertices, 4), engines, csr)
             # the device engine really took the kernel path whenever it
             # had edges to decode
             dev = engines["device"].stats
             assert dev.device_batches == dev.batches
+            # the hot-set arm's accounting stayed conserved while its
+            # answers (checked above) stayed byte-identical
+            hs = engines["hotset"].hotset.stats
+            assert hs.conserved
+            assert hs.resident_bytes <= \
+                engines["hotset"].hotset.plan.budget_bytes
 
 
 @prop(6)
@@ -110,9 +129,10 @@ def test_differential_under_fault_injection(draw: Draw):
                   pgfuse_eviction="clock", pgfuse_readahead=0,
                   pgfuse_retries=3, pgfuse_retry_backoff_s=0.0)
         with paragrapher.open_graph(gp, **kw) as gh, \
-                paragrapher.open_graph(gp, **kw) as gd:
+                paragrapher.open_graph(gp, **kw) as gd, \
+                paragrapher.open_graph(gp, **kw) as gs:
             injectors = {}
-            for name, g in (("host", gh), ("device", gd)):
+            for name, g in (("host", gh), ("device", gd), ("hotset", gs)):
                 inj = FaultyStorage(latency_s=1e-5 if draw.bool() else 0.0)
                 # spaced injection points: a transient EIO's retry (the
                 # NEXT underlying call) must be clean, or the burst
@@ -124,10 +144,13 @@ def test_differential_under_fault_injection(draw: Draw):
             engines = {
                 "host": NeighborQueryEngine(gh, decode="host"),
                 "device": NeighborQueryEngine(gd, decode="device"),
+                "hotset": NeighborQueryEngine(gs, decode="host",
+                                              hotset=_hot_cache(draw)),
             }
             _check_trace(_zipf_trace(draw, csr.n_vertices, 3), engines, csr)
+            assert engines["hotset"].hotset.stats.conserved
             # injected EIOs that fired were absorbed by the retry policy
-            for name, g in (("host", gh), ("device", gd)):
+            for name, g in (("host", gh), ("device", gd), ("hotset", gs)):
                 fired = sum(1 for (_, _, _, n) in injectors[name].calls
                             if n == -1)
                 assert g.pgfuse_stats().retried_reads >= fired

@@ -38,6 +38,10 @@ def _sharded(path, draw, decode="host", **kw):
     okw = dict(OPEN_KW)
     if draw:
         okw["pgfuse_block_size"] = draw.choice([512, 1 << 12])
+        if draw.bool():
+            # the hot-set arm: every shard replica carries the HBM tier
+            # of decoded runs, and answers must STAY byte-identical
+            kw.setdefault("hotset_bytes", draw.choice([1 << 12, 1 << 16]))
     return ShardedQueryService(path, n_shards=n_shards,
                                replication=replication, decode=decode,
                                open_kwargs=okw, **kw)
@@ -61,6 +65,16 @@ def _check_conservation(svc):
         assert rd["batches"] <= merged.batches \
             <= rd["batches"] * svc.n_shards
         assert sum(rd["shard_batches"].values()) == merged.batches
+    # hot-set arm: fleet totals are the per-shard sums, and the fold
+    # preserves both conservation invariants
+    hs = svc.hotset_stats()
+    if hs is not None:
+        assert hs.conserved
+        per = [s for s in svc.per_shard_hotset_stats() if s is not None]
+        for field in ("lookups", "hits", "fills", "admitted",
+                      "resident_bytes"):
+            assert sum(getattr(s, field) for s in per) == \
+                getattr(hs, field), field
 
 
 @prop(8)

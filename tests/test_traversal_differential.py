@@ -101,7 +101,11 @@ def _service(path, draw_or_none, decode="host", **kw):
         pgfuse_block_size=(draw_or_none.choice([512, 1 << 12])
                            if draw_or_none else 512),
         pgfuse_readahead=0, pgfuse_eviction="clock")
-    engine = NeighborQueryEngine(g, decode=decode)
+    # hot-set arm: frontier hub vertices answered from the resident
+    # decoded-run tier must leave every traversal field bit-identical
+    hotset = (draw_or_none.choice([None, 1 << 12, 1 << 16])
+              if draw_or_none else None)
+    engine = NeighborQueryEngine(g, decode=decode, hotset=hotset)
     return TraversalService(engine, **kw), engine, g
 
 
@@ -140,8 +144,13 @@ def test_khop_and_bfs_match_csr_reference(draw: Draw):
                                    max_vertices=max_vertices)
                 _assert_matches(res, ref, ("bfs", max_edges, max_vertices))
             # the frontier loop really batched: engine batches == hops
-            # (each hop is exactly ONE neighbors_batch call)
+            # (each hop is exactly ONE neighbors_batch call) — hot-set
+            # hits change where a frontier's runs come from, never how
+            # many engine batches it takes
             assert engine.stats.batches == svc.stats.frontier_batches
+            if engine.hotset is not None:
+                assert engine.hotset.stats.conserved
+                assert "hotset" in svc.as_dict()
         finally:
             svc.close(), engine.close(), g.close()
 
