@@ -1,0 +1,40 @@
+"""Metrics-namespace drift gate: every ``*Stats.as_dict()`` key must be
+declared in ``repro.obs.metrics.NAMESPACE`` and vice versa.
+
+Thin CI wrapper over :func:`repro.obs.metrics.metrics_drift` (the logic
+lives in the package so ``tests/test_docs_sync.py`` asserts the same
+thing).  Importing the stats classes needs numpy but not jax, so this
+runs in the fast docs lane.
+
+Exit code 0 = in sync; 1 = drift (one line per violation).
+"""
+
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[2]
+sys.path.insert(0, str(ROOT / "src"))
+
+
+def main() -> int:
+    from repro.obs.metrics import NAMESPACE, metrics_drift
+
+    problems = metrics_drift()
+    for p in problems:
+        print(f"METRICS DRIFT: {p}")
+    if problems:
+        print(f"\n{len(problems)} violation(s). Fix by updating "
+              f"repro.obs.metrics.NAMESPACE (and the table in "
+              f"docs/observability.md) to match the as_dict() surface, "
+              f"or the surface to match the namespace.")
+        return 1
+    n = sum(len(v) for v in NAMESPACE.values())
+    print(f"metrics namespace in sync: {n} keys across "
+          f"{len(NAMESPACE)} prefixes")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

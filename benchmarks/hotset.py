@@ -172,6 +172,10 @@ def run(workdir: str = "/tmp/repro_bench_hotset", profile: str = "null",
         "hotset_hit_advantage": advantage,
         # fraction of lookups answered from resident decoded runs
         "hotset_hit_rate": hs.hit_rate,
+        # prefetch usefulness: of the runs the trace-driven prefetcher
+        # decoded ahead of demand, the fraction a later lookup actually
+        # hit (the rest aged out unused — wasted charged decode)
+        "hotset_prefetch_hit_rate": hs.prefetch_hit_rate,
     }
     result["tracked_lower"] = {
         # the hot arm's charged request latency (virtual seconds) —

@@ -16,11 +16,12 @@ EXPERIMENTS.md).
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
 
-def _suite_figs(args) -> None:
+def _suite_figs(args):
     """Table I + Figs. 2-4 (CSV blocks; no BENCH json)."""
     names = ["web-sm", "social-sm", "web-md"] if args.fast else None
 
@@ -65,9 +66,13 @@ def _suite_figs(args) -> None:
               f"ratio={r['pgfuse_over_compbin']:.3f}")
     x = fig4_crossover.crossover_MiB(f4)
     print(f"fig4,SUMMARY,crossover_MiB={x if x else 'none'}")
+    return {"table1": {r["name"]: r for r in t1_rows},
+            "fig2": {r["name"]: r for r in f2},
+            "fig3": {r["name"]: r for r in f3},
+            "fig4": {r["name"]: r for r in f4}}
 
 
-def _suite_loading(args) -> None:
+def _suite_loading(args):
     """Streaming-loader bandwidth (topology + feature store) ->
     BENCH_loading.json, the artifact CI's bench regression lane gates."""
     from benchmarks import loading
@@ -75,12 +80,12 @@ def _suite_loading(args) -> None:
     print("=" * 72)
     print("Loading — streamed topology + features (emits BENCH json)")
     print("=" * 72)
-    loading.run(workdir=args.workdir, profile=args.profile,
+    return loading.run(workdir=args.workdir, profile=args.profile,
                 scale=13 if args.fast else 16, hosts=args.hosts,
                 out=args.bench_out)
 
 
-def _suite_query(args) -> None:
+def _suite_query(args):
     """Random-access query engine vs sequential policy on a zipf trace
     (+ host-vs-device decode arms on a large-fanout trace) ->
     BENCH_query.json (virtual-clock p50/p99 latency + hit rate, gated
@@ -90,12 +95,12 @@ def _suite_query(args) -> None:
     print("=" * 72)
     print("Query — random-access neighbor engine (emits BENCH json)")
     print("=" * 72)
-    query.run(workdir=args.workdir, profile=args.profile,
+    return query.run(workdir=args.workdir, profile=args.profile,
               scale=14 if args.fast else 17,
               out=args.query_out)
 
 
-def _suite_traversal(args) -> None:
+def _suite_traversal(args):
     """Frontier-batched traversal service vs per-vertex naive BFS on a
     zipf seed trace (+ a deterministic overload replay through the
     admission gate) -> BENCH_traversal.json (virtual-clock p50/p99
@@ -105,12 +110,12 @@ def _suite_traversal(args) -> None:
     print("=" * 72)
     print("Traversal — multi-hop service vs per-vertex BFS (emits BENCH json)")
     print("=" * 72)
-    traversal.run(workdir=args.workdir, profile=args.profile,
+    return traversal.run(workdir=args.workdir, profile=args.profile,
                   scale=13 if args.fast else 15,
                   out=args.traversal_out)
 
 
-def _suite_sharded(args) -> None:
+def _suite_sharded(args):
     """1/2/4-shard scatter-gather deployments replaying the same zipf
     hub trace on per-shard simulated storage -> BENCH_sharded.json
     (2-shard aggregate-makespan advantage gated upward with a hard
@@ -120,12 +125,12 @@ def _suite_sharded(args) -> None:
     print("=" * 72)
     print("Sharded — scatter-gather scale-out 1/2/4 shards (emits BENCH json)")
     print("=" * 72)
-    sharded.run(workdir=args.workdir, profile=args.profile,
+    return sharded.run(workdir=args.workdir, profile=args.profile,
                 scale=13 if args.fast else 15,
                 out=args.sharded_out)
 
 
-def _suite_hotset(args) -> None:
+def _suite_hotset(args):
     """HBM-resident hot-set tier (decoded hub runs, degree-aware
     admission) vs the packed-byte-only engine on a degree-correlated
     zipf trace -> BENCH_hotset.json (hit advantage gated upward with a
@@ -135,7 +140,7 @@ def _suite_hotset(args) -> None:
     print("=" * 72)
     print("Hotset — HBM decoded-run tier vs packed path (emits BENCH json)")
     print("=" * 72)
-    hotset.run(workdir=args.workdir,
+    return hotset.run(workdir=args.workdir,
                scale=13 if args.fast else 16,
                out=args.hotset_out)
 
@@ -183,7 +188,20 @@ def main() -> None:
 
     t0 = time.time()
     for name in picked:
-        SUITES[name](args)
+        result = SUITES[name](args)
+        if isinstance(result, dict):
+            # one flattened metrics sidecar per suite next to its BENCH
+            # json — dotted numeric keys only (repro.obs.metrics
+            # .flatten_numeric), uploaded by CI's bench lane so every
+            # run doubles as a metrics-surface smoke artifact
+            from repro.obs.metrics import flatten_numeric
+            side = f"BENCH_{name}_metrics.json"
+            with open(side, "w") as f:
+                json.dump(flatten_numeric(result), f, indent=2,
+                          sort_keys=True)
+                f.write("\n")
+            print(f"{name}: wrote {side} "
+                  f"({len(flatten_numeric(result))} metrics)")
     print("=" * 72)
     print(f"done in {time.time()-t0:.1f}s  "
           f"(roofline table: python -m benchmarks.roofline)")

@@ -69,6 +69,8 @@ from typing import BinaryIO, Dict, Optional, Union
 
 import numpy as np
 
+from repro.obs.trace import NULL_TRACER as _NULL_TRACER
+
 # Block states (paper Fig. 1)
 LOADED = 0        # >= 0: reader count
 NOT_LOADED = -1
@@ -102,6 +104,15 @@ class PGFuseStats:
     def merge(self, other: "PGFuseStats") -> None:
         for f in dataclasses.fields(self):
             setattr(self, f.name, getattr(self, f.name) + getattr(other, f.name))
+
+    def as_dict(self) -> dict:
+        """Fields + the derived block-cache ``hit_rate`` — the surface
+        registered under the ``pgfuse.*`` metric namespace
+        (``repro.obs.metrics.NAMESPACE``; drift-checked in CI)."""
+        d = dataclasses.asdict(self)
+        n = d["cache_hits"] + d["cache_misses"]
+        d["hit_rate"] = d["cache_hits"] / n if n else 0.0
+        return d
 
 
 class _StatusArray:
@@ -212,6 +223,9 @@ class CachedFile:
         self.stats = PGFuseStats()
         self._stats_lock = threading.Lock()
         self._fs = fs
+        # span tracer for storage reads: set directly, or inherited from
+        # the owning mount (engines hand their tracer to PGFuseFS)
+        self.tracer = None
         self._closed = False
 
     @property
@@ -239,17 +253,30 @@ class CachedFile:
         (tests/conftest.py::FaultyStorage wraps ``_read_underlying_range``)
         exercise the same policy a real storage error would.
         """
-        attempt = 0
-        while True:
-            try:
-                return self._read_underlying_range(b0, n_blocks)
-            except OSError:
-                if attempt >= self.retries:
-                    raise
-                attempt += 1
-                with self._stats_lock:
-                    self.stats.retried_reads += 1
-                time.sleep(self.retry_backoff_s * attempt)
+        tracer = self.tracer
+        if tracer is None:
+            tracer = (self._fs.tracer if self._fs is not None
+                      else None) or _NULL_TRACER
+        # tier=storage: under a request this nests inside the engine's
+        # gather span; with no request context (producer threads) the
+        # tracer suppresses it rather than recording an orphan root
+        with tracer.span("pgfuse.read", tier="storage",
+                         block=int(b0), blocks=int(n_blocks)) as sp:
+            attempt = 0
+            while True:
+                try:
+                    return self._read_underlying_range(b0, n_blocks)
+                except OSError as e:
+                    if attempt >= self.retries:
+                        raise
+                    attempt += 1
+                    with self._stats_lock:
+                        self.stats.retried_reads += 1
+                    # one event per retry that goes back to storage:
+                    # trace counts reconcile with stats.retried_reads
+                    sp.event("retry", attempt=attempt,
+                             errno=e.errno if e.errno is not None else -1)
+                    time.sleep(self.retry_backoff_s * attempt)
 
     def _claim_readahead(self, b: int) -> list[int]:
         """Claim (-1 -> -2) a contiguous run [b, b+1, ...] for one load.
@@ -762,6 +789,10 @@ class PGFuseFS:
         self.retries = int(retries)
         self.retry_backoff_s = float(retry_backoff_s)
         self.clock = clock
+        # mount-wide span tracer (repro.obs): cached files inherit it
+        # unless they carry their own; engines set it when constructed
+        # with tracer= so storage reads nest under their gather spans
+        self.tracer = None
         # per-file resident caps keyed by fspath; applied at mount() and
         # retroactively by set_file_budget()
         self._file_budgets = {os.fspath(k): int(v)

@@ -79,12 +79,69 @@ def serve_din(cfg, *, batch: int, n_requests: int) -> None:
              len(lat_ms))
 
 
+def collect_service_metrics(service) -> "MetricsRegistry":
+    """Fold EVERY stats surface the serving stack exposes into one
+    :class:`repro.obs.metrics.MetricsRegistry` — the ``--metrics-json``
+    snapshot and the Prometheus text both render from this.
+
+    Works for either backend shape behind a
+    :class:`repro.query.TraversalService`: a single
+    :class:`repro.query.NeighborQueryEngine` (its ``query.*`` stats plus
+    its mount's ``pgfuse.*``), or a
+    :class:`repro.query.ShardedQueryService` (fleet-folded ``query.*``
+    already, plus ``router.*`` and every replica mount's ``pgfuse.*``
+    folded by re-registration — the registry's fold matches
+    ``PGFuseStats.merge``, so per-shard sums equal these totals).
+    """
+    from repro.obs.metrics import MetricsRegistry
+
+    reg = MetricsRegistry()
+    d = service.as_dict()
+    reg.register_stats("traversal", d["traversal"])
+    reg.register_stats("query", d["query"])
+    if "hotset" in d:
+        reg.register_stats("hotset", d["hotset"])
+    backend = service.engine
+    if hasattr(backend, "router"):          # ShardedQueryService
+        reg.register_stats("router", backend.router.as_dict())
+        for row in backend.replicas:
+            for rep in row:
+                pg = rep.graph.pgfuse_stats()
+                if pg is not None:
+                    reg.register_stats("pgfuse", pg.as_dict())
+    else:
+        pg = backend.graph.pgfuse_stats()
+        if pg is not None:
+            reg.register_stats("pgfuse", pg.as_dict())
+    return reg
+
+
+def _emit_metrics(reg, tracer, metrics_json) -> None:
+    """Shared exposition tail: log Prometheus text + the per-tier
+    bottleneck report for any sampled traces, then persist the JSON
+    snapshot when ``--metrics-json`` asked for one."""
+    from repro.obs.report import render_report
+
+    if tracer is not None:
+        traces = tracer.drain()
+        reg.set("obs.sampled_traces", len(traces))
+        reg.set("obs.dropped_traces", tracer.dropped_traces)
+        if traces:
+            log.info("trace report (%d sampled requests):\n%s",
+                     len(traces), render_report(traces))
+    log.info("metrics snapshot:\n%s", reg.to_prometheus())
+    if metrics_json:
+        reg.write_json(metrics_json)
+        log.info("wrote metrics snapshot to %s", metrics_json)
+
+
 def make_gnn_server(arch_id: str, cfg, workdir: str, *,
                     fanouts=(5, 5), use_pgfuse: bool = True,
                     seed: int = 0, decode: str = "auto",
                     fs=None, engine_name: str = None,
                     engine_budget: int = None,
-                    hotset_bytes: int = None):
+                    hotset_bytes: int = None,
+                    tracer=None):
     """Build the end-to-end GNN inference server over CompBin storage.
 
     Returns ``(answer, engine, close)``: ``answer(vertex_ids)`` runs one
@@ -152,7 +209,8 @@ def make_gnn_server(arch_id: str, cfg, workdir: str, *,
                                      pgfuse_file_budget=churn_cap,
                                      pgfuse_file_readahead=0,
                                      pgfuse_engine=share)
-    engine = NeighborQueryEngine(g, decode=decode, hotset=hotset_bytes)
+    engine = NeighborQueryEngine(g, decode=decode, hotset=hotset_bytes,
+                                 tracer=tracer)
     sampler = NeighborSampler(engine, fanouts=fanouts, seed=seed)
     mod = _GNN_MODULES[arch_id]
     params = mod.init_params(cfg, jax.random.key(0))
@@ -182,7 +240,8 @@ def make_traversal_server(workdir: str, *, decode: str = "auto",
                           service_edges_per_s: float = 5.0e6,
                           servers: int = 2, seed: int = 1,
                           shards: int = 1, replication: int = 1,
-                          hotset_bytes: int = None):
+                          hotset_bytes: int = None,
+                          tracer=None):
     """The traversal request type next to GNN inference: a
     :class:`repro.query.TraversalService` over the SAME CompBin bytes
     (and the same random-access PG-Fuse policy) the inference server
@@ -224,7 +283,7 @@ def make_traversal_server(workdir: str, *, decode: str = "auto",
         # budget one mount would have had (the locality the split buys)
         backend = ShardedQueryService(
             gp, n_shards=shards, replication=replication, decode=decode,
-            hotset_bytes=hotset_bytes,
+            hotset_bytes=hotset_bytes, tracer=tracer,
             open_kwargs=dict(
                 pgfuse_block_size=block_size,
                 pgfuse_max_resident_bytes=max(
@@ -239,13 +298,15 @@ def make_traversal_server(workdir: str, *, decode: str = "auto",
             gp, use_pgfuse=True, pgfuse_block_size=block_size,
             pgfuse_readahead=amode.readahead, pgfuse_eviction=amode.eviction,
             pgfuse_max_resident_bytes=256 * block_size)
-        engine = NeighborQueryEngine(g, decode=decode, hotset=hotset_bytes)
+        engine = NeighborQueryEngine(g, decode=decode, hotset=hotset_bytes,
+                                     tracer=tracer)
         backend = engine
         plan = policy.choose_admission(
             slo_s, edge_budget=edge_budget,
             service_edges_per_s=service_edges_per_s, servers=servers)
     service = TraversalService(backend, admission=plan,
-                               default_max_edges=edge_budget)
+                               default_max_edges=edge_budget,
+                               tracer=tracer)
 
     def close() -> None:
         service.close()
@@ -260,15 +321,25 @@ def make_traversal_server(workdir: str, *, decode: str = "auto",
 
 def serve_traversal(*, n_requests: int, batch: int, workdir: str,
                     shards: int = 1, replication: int = 1,
-                    hotset_bytes: int = None) -> None:
+                    hotset_bytes: int = None,
+                    metrics_json: str = None,
+                    trace_sample: int = 0) -> None:
     """Synthetic zipf traversal traffic against
     :func:`make_traversal_server`: k-hop neighborhoods, bounded BFS
-    visits and shortest paths over hub-biased seeds."""
+    visits and shortest paths over hub-biased seeds.
+
+    ``trace_sample=N`` turns on span tracing for every Nth request
+    (:class:`repro.obs.Tracer`); the per-tier attribution report is
+    logged on exit.  ``metrics_json`` persists the folded
+    :func:`collect_service_metrics` snapshot there on exit."""
+    from repro.obs import Tracer
     from repro.query import TraversalShed
 
+    tracer = Tracer(sample_every=trace_sample) if trace_sample else None
     service, close = make_traversal_server(workdir, shards=shards,
                                            replication=replication,
-                                           hotset_bytes=hotset_bytes)
+                                           hotset_bytes=hotset_bytes,
+                                           tracer=tracer)
     try:
         n = service.n_vertices
         rng = np.random.default_rng(0)
@@ -306,12 +377,16 @@ def serve_traversal(*, n_requests: int, batch: int, workdir: str,
                      hs["hit_rate"], hs["hits"], hs["lookups"],
                      hs["resident_entries"], hs["resident_bytes"] / 1024,
                      hs["pinned"])
+        if metrics_json or tracer is not None:
+            _emit_metrics(collect_service_metrics(service), tracer,
+                          metrics_json)
     finally:
         close()
 
 
 def serve_gnn(arch_id: str, cfg, *, batch: int, n_requests: int,
-              workdir: str, hotset_bytes: int = None) -> None:
+              workdir: str, hotset_bytes: int = None,
+              metrics_json: str = None, trace_sample: int = 0) -> None:
     """Synthetic user-inference traffic against :func:`make_gnn_server`.
 
     Requests draw vertices zipf-style (a hot head, like real user
@@ -319,8 +394,12 @@ def serve_gnn(arch_id: str, cfg, *, batch: int, n_requests: int,
     ratio and cache hit rate below are the quantities the engine exists
     to maximize.
     """
+    from repro.obs import Tracer
+
+    tracer = Tracer(sample_every=trace_sample) if trace_sample else None
     answer, engine, close = make_gnn_server(arch_id, cfg, workdir,
-                                            hotset_bytes=hotset_bytes)
+                                            hotset_bytes=hotset_bytes,
+                                            tracer=tracer)
     try:
         n = engine.n_vertices
         rng = np.random.default_rng(0)
@@ -354,6 +433,15 @@ def serve_gnn(arch_id: str, cfg, *, batch: int, n_requests: int,
                      hs.hit_rate, hs.hits, hs.lookups,
                      hs.resident_entries, hs.resident_bytes / 1024,
                      hs.pinned)
+        if metrics_json or tracer is not None:
+            from repro.obs.metrics import MetricsRegistry
+            reg = MetricsRegistry()
+            reg.register_stats("query", st.as_dict())
+            if pg is not None:
+                reg.register_stats("pgfuse", pg.as_dict())
+            if engine.hotset is not None:
+                reg.register_stats("hotset", engine.hotset.stats.as_dict())
+            _emit_metrics(reg, tracer, metrics_json)
     finally:
         close()
 
@@ -384,6 +472,16 @@ def main() -> None:
                          "of decoded hub runs (gnn/traversal serving; "
                          "default: no hot set). Admission is degree-"
                          "aware — see policy.choose_hotset_admission")
+    ap.add_argument("--metrics-json", default=None, metavar="PATH",
+                    help="write a JSON metrics snapshot on exit (every "
+                         "stats surface folded across all shards into "
+                         "the repro.obs.metrics namespace; gnn/"
+                         "traversal serving)")
+    ap.add_argument("--trace-sample", type=int, default=0, metavar="N",
+                    help="span-trace every Nth request through the full "
+                         "stack (route/gather/storage/decode/H2D) and "
+                         "log the per-tier attribution report on exit "
+                         "(0: tracing off, the no-op tracer)")
     args = ap.parse_args()
 
     spec = get_arch(args.arch)
@@ -395,7 +493,9 @@ def main() -> None:
         serve_traversal(n_requests=args.requests, batch=args.batch,
                         workdir=args.workdir, shards=args.shards,
                         replication=args.replication,
-                        hotset_bytes=args.hotset_bytes)
+                        hotset_bytes=args.hotset_bytes,
+                        metrics_json=args.metrics_json,
+                        trace_sample=args.trace_sample)
         return
     if spec.family == "lm":
         serve_lm(cfg, batch=args.batch, prompt_len=args.prompt_len,
@@ -405,7 +505,9 @@ def main() -> None:
     elif spec.family == "gnn":
         serve_gnn(args.arch, cfg, batch=args.batch,
                   n_requests=args.requests, workdir=args.workdir,
-                  hotset_bytes=args.hotset_bytes)
+                  hotset_bytes=args.hotset_bytes,
+                  metrics_json=args.metrics_json,
+                  trace_sample=args.trace_sample)
     else:
         raise SystemExit(f"unknown family {spec.family!r}")
 

@@ -27,4 +27,5 @@ from repro.query.traversal import (TRAVERSAL_KINDS,  # noqa: F401
                                    TraversalRequest, TraversalResult,
                                    TraversalService, TraversalShed,
                                    TraversalStats)
-from repro.query.window import CLOSE_REASONS, AdaptiveWindow  # noqa: F401
+from repro.query.window import (CLOSE_REASONS,  # noqa: F401
+                                AdaptiveWindow, close_reason_counts)

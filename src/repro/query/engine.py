@@ -60,6 +60,8 @@ import numpy as np
 from repro.core import compbin
 from repro.core import policy as _policy
 from repro.core.paragrapher import FORMAT_COMPBIN, GraphHandle
+from repro.obs.metrics import LatencyHistogram
+from repro.obs.trace import NULL_TRACER
 from repro.query.window import AdaptiveWindow
 
 DECODE_MODES = ("host", "device", "auto")
@@ -94,18 +96,17 @@ def _blocks_of(ranges: Sequence[tuple], block_size: int) -> set:
     return touched
 
 
-#: per-batch latency samples retained for the percentile window; a
-#: long-lived serving engine keeps the RECENT distribution (bounded
-#: memory, bounded np.quantile cost) rather than its whole history
-LATENCY_WINDOW = 4096
-
-
 @dataclasses.dataclass
 class QueryStats:
     """Per-engine accounting (reset with :meth:`reset`).
 
-    ``latencies_s`` holds the last :data:`LATENCY_WINDOW` batch
-    latencies; p50/p99 are over that rolling window.
+    ``latencies`` is a fixed-size log-bucket
+    :class:`repro.obs.metrics.LatencyHistogram` over the engine's WHOLE
+    history — bounded memory with no rolling-window truncation, and its
+    merge is exactly associative (the old raw-list retention grew
+    without bound and ``merge()`` concatenated untrimmed).  p50/p99 are
+    within one bucket width (~2%) of the exact values, exact for
+    constant (virtual-clock) distributions.
     """
 
     requests: int = 0          # vertex lookups requested (duplicates incl.)
@@ -123,7 +124,8 @@ class QueryStats:
     # with in-flight batches, because every mutation (the engine's
     # per-batch fold, reset) runs under this object's _lock
     close_reasons: dict = dataclasses.field(default_factory=dict)
-    latencies_s: list = dataclasses.field(default_factory=list)
+    latencies: LatencyHistogram = dataclasses.field(
+        default_factory=LatencyHistogram)
 
     def __post_init__(self) -> None:
         # the stats object OWNS its lock (an attribute, not a field, so
@@ -141,10 +143,7 @@ class QueryStats:
 
     def latency_quantile(self, q: float) -> float:
         with self._lock:
-            lat = list(self.latencies_s)
-        if not lat:
-            return 0.0
-        return float(np.quantile(np.asarray(lat), q))
+            return self.latencies.quantile(q)
 
     @property
     def p50_s(self) -> float:
@@ -156,14 +155,15 @@ class QueryStats:
 
     def as_dict(self) -> dict:
         with self._lock:
-            d = dataclasses.asdict(self)
-        n = d.pop("latencies_s")
-        d["n_latencies"] = len(n)
+            d = {f.name: getattr(self, f.name)
+                 for f in dataclasses.fields(self)}
+            d["close_reasons"] = dict(d["close_reasons"])
+            hist = d.pop("latencies")
+            d["n_latencies"] = hist.n
+            d["p50_s"] = hist.quantile(0.50)
+            d["p99_s"] = hist.quantile(0.99)
         d["dedup_ratio"] = (d["requests"] / d["unique_vertices"]
                             if d["unique_vertices"] else 0.0)
-        lat = np.asarray(n) if n else None
-        d["p50_s"] = float(np.quantile(lat, 0.50)) if n else 0.0
-        d["p99_s"] = float(np.quantile(lat, 0.99)) if n else 0.0
         return d
 
     def _snapshot(self) -> "QueryStats":
@@ -171,7 +171,7 @@ class QueryStats:
         deep-copied, so the snapshot never aliases live state)."""
         with self._lock:
             return dataclasses.replace(
-                self, latencies_s=list(self.latencies_s),
+                self, latencies=self.latencies.copy(),
                 close_reasons=dict(self.close_reasons))
 
     def merge(self, other: "QueryStats") -> "QueryStats":
@@ -179,8 +179,8 @@ class QueryStats:
 
         The sharded service (:mod:`repro.query.sharded`) folds every
         shard replica's engine stats into service totals with this:
-        counters sum, ``close_reasons`` sum key-wise, latency samples
-        concatenate (untrimmed, so the fold is exactly associative and
+        counters sum, ``close_reasons`` sum key-wise, latency
+        histograms merge bucket-wise (exactly associative, so
         per-shard sums equal service totals).  Each side is snapshotted
         under its own lock — no lock ordering between the two objects,
         so merging is safe against concurrent folds AND against
@@ -191,13 +191,13 @@ class QueryStats:
         a, b = self._snapshot(), other._snapshot()
         out = QueryStats()
         for f in dataclasses.fields(out):
-            if f.name in ("latencies_s", "close_reasons"):
+            if f.name in ("latencies", "close_reasons"):
                 continue
             setattr(out, f.name, getattr(a, f.name) + getattr(b, f.name))
         for src in (a.close_reasons, b.close_reasons):
             for k, v in src.items():
                 out.close_reasons[k] = out.close_reasons.get(k, 0) + v
-        out.latencies_s = a.latencies_s + b.latencies_s
+        out.latencies = a.latencies.merge(b.latencies)
         return out
 
     def reset(self) -> "QueryStats":
@@ -212,12 +212,14 @@ class QueryStats:
         """
         with self._lock:
             snap = dataclasses.replace(
-                self, latencies_s=list(self.latencies_s),
+                self, latencies=self.latencies.copy(),
                 close_reasons=dict(self.close_reasons))
             for f in dataclasses.fields(self):
                 cur = getattr(self, f.name)
                 setattr(self, f.name,
-                        [] if isinstance(cur, list)
+                        LatencyHistogram()
+                        if isinstance(cur, LatencyHistogram)
+                        else [] if isinstance(cur, list)
                         else {} if isinstance(cur, dict) else 0)
         return snap
 
@@ -290,7 +292,8 @@ class NeighborQueryEngine:
                  window_patience: int = 2,
                  window_min_overlap: float = 0.05,
                  hotset=None,
-                 clock: Callable[[], float] = time.perf_counter):
+                 clock: Callable[[], float] = time.perf_counter,
+                 tracer=None):
         if graph.format != FORMAT_COMPBIN:
             raise ValueError(
                 f"random-access queries need CompBin's fixed-width direct "
@@ -305,6 +308,13 @@ class NeighborQueryEngine:
                 f"lanes; use decode='host' (or 'auto', which routes there)")
         self._graph = graph
         self._clock = clock
+        # span tracing (repro.obs): the default NULL_TRACER makes every
+        # span site a no-op context manager — zero-cost when disabled.
+        # A real tracer is also handed to this engine's PG-Fuse mount so
+        # storage reads nest under this engine's gather spans.
+        self._tracer = tracer if tracer is not None else NULL_TRACER
+        if tracer is not None and graph.fs is not None:
+            graph.fs.tracer = tracer
         self.decode = decode
         self.max_batch = int(max_batch)
         self.window_s = float(window_s)
@@ -511,74 +521,96 @@ class NeighborQueryEngine:
                 f"vertex ids must be in [0, {self.n_vertices}); got "
                 f"[{vertices.min()}, {vertices.max()}]")
         t0 = self._clock()
-        uniq, inverse = np.unique(vertices, return_inverse=True)
-        # tier-3 lookup FIRST: a hot vertex touches neither storage nor
-        # the PG-Fuse block cache nor the decoder below
-        hot: dict = {}
-        if self._hotset is not None:
-            hot = self._hotset.lookup(uniq)
-            self._hotset.observe(uniq)
-        if hot:
-            cold = uniq[np.fromiter((int(v) not in hot for v in uniq),
-                                    bool, len(uniq))]
-        else:
-            cold = uniq
-        off_reads = nbr_reads = 0
-        off_ranges: List[tuple] = []
-        nbr_ranges: List[tuple] = []
-        decoded_cold: List[np.ndarray] = []
-        bytes_h2d = 0
-        on_device = 0
-        if cold.size:
-            f, own = self._open()
-            try:
-                spans, off_reads, off_ranges = \
-                    self._gather_offsets(cold, f)
-                packed, nbr_reads, nbr_ranges = \
-                    self._gather_packed(spans, f)
-            finally:
-                if own:
-                    f.close()
-            # placement per batch: edge mass is exact here (offsets
-            # gathered, nothing decoded yet)
-            n_edges = int((spans[:, 1] - spans[:, 0]).sum()) \
-                if len(spans) else 0
-            plan = self._decode_plan(n_edges)
-            if plan.device:
-                decoded_cold, bytes_h2d = self._decode_device(packed)
+        # the gather span covers the whole coalesced fetch: PG-Fuse read
+        # spans (tier=storage) and the decode span nest inside it, so
+        # its SELF time is the pure batching machinery
+        with self._tracer.span("query.batch", tier="gather",
+                               vertices=int(vertices.size)) as bsp:
+            uniq, inverse = np.unique(vertices, return_inverse=True)
+            # tier-3 lookup FIRST: a hot vertex touches neither storage
+            # nor the PG-Fuse block cache nor the decoder below
+            hot: dict = {}
+            if self._hotset is not None:
+                hot = self._hotset.lookup(uniq)
+                self._hotset.observe(uniq)
+                bsp.event("hotset_lookup", hits=len(hot),
+                          misses=int(len(uniq) - len(hot)))
+            if hot:
+                cold = uniq[np.fromiter((int(v) not in hot for v in uniq),
+                                        bool, len(uniq))]
             else:
-                decoded_cold, bytes_h2d = self._decode_host(packed)
-            on_device = int(plan.device)
-        if self._hotset is not None:
-            # fills are free for the caller: the decode already happened
-            # (admission keeps the cold tail out — see hotset.fill)
-            for v, d in zip(cold, decoded_cold):
-                self._hotset.fill(int(v), d)
-        if hot:
-            it = iter(decoded_cold)
-            decoded = [hot[int(v)] if int(v) in hot else next(it)
-                       for v in uniq]
-        else:
-            decoded = decoded_cold
-        result = [decoded[j] for j in inverse]
-        latency = self._clock() - t0
-        touched = _blocks_of(off_ranges + nbr_ranges, self._block_size)
-        with self._stats_lock:
-            st = self.stats
-            st.requests += len(vertices)
-            st.unique_vertices += len(uniq)
-            st.batches += 1
-            st.coalesced_reads += off_reads + nbr_reads
-            st.blocks_touched += len(touched)
-            st.bytes_gathered += sum(e - s for s, e in off_ranges + nbr_ranges)
-            st.edges_returned += sum(len(d) for d in result)
-            st.device_batches += on_device
-            st.bytes_h2d += bytes_h2d
-            st.close_reasons[_close_reason] = \
-                st.close_reasons.get(_close_reason, 0) + 1
-            st.latencies_s.append(latency)
-            if len(st.latencies_s) > LATENCY_WINDOW:
-                del st.latencies_s[0]
+                cold = uniq
+            off_reads = nbr_reads = 0
+            off_ranges: List[tuple] = []
+            nbr_ranges: List[tuple] = []
+            decoded_cold: List[np.ndarray] = []
+            bytes_h2d = 0
+            on_device = 0
+            if cold.size:
+                f, own = self._open()
+                try:
+                    spans, off_reads, off_ranges = \
+                        self._gather_offsets(cold, f)
+                    packed, nbr_reads, nbr_ranges = \
+                        self._gather_packed(spans, f)
+                finally:
+                    if own:
+                        f.close()
+                # placement per batch: edge mass is exact here (offsets
+                # gathered, nothing decoded yet)
+                n_edges = int((spans[:, 1] - spans[:, 0]).sum()) \
+                    if len(spans) else 0
+                plan = self._decode_plan(n_edges)
+                if plan.device:
+                    with self._tracer.span("query.decode", tier="decode",
+                                           mode="device",
+                                           edges=n_edges) as dsp:
+                        decoded_cold, bytes_h2d = \
+                            self._decode_device(packed)
+                        # zero-width marker carrying the shipped bytes:
+                        # H2D cost is folded into the device decode
+                        # under the virtual clock, but the tier stays
+                        # visible in the attribution
+                        with self._tracer.span("query.h2d",
+                                               tier="h2d") as hsp:
+                            hsp.set(bytes=int(bytes_h2d))
+                else:
+                    with self._tracer.span("query.decode", tier="decode",
+                                           mode="host", edges=n_edges):
+                        decoded_cold, bytes_h2d = self._decode_host(packed)
+                on_device = int(plan.device)
+            if self._hotset is not None:
+                # fills are free for the caller: the decode already
+                # happened (admission keeps the cold tail out — see
+                # hotset.fill)
+                for v, d in zip(cold, decoded_cold):
+                    self._hotset.fill(int(v), d)
+                bsp.event("hotset_fill", offered=int(cold.size))
+            if hot:
+                it = iter(decoded_cold)
+                decoded = [hot[int(v)] if int(v) in hot else next(it)
+                           for v in uniq]
+            else:
+                decoded = decoded_cold
+            result = [decoded[j] for j in inverse]
+            latency = self._clock() - t0
+            touched = _blocks_of(off_ranges + nbr_ranges, self._block_size)
+            with self._stats_lock:
+                st = self.stats
+                st.requests += len(vertices)
+                st.unique_vertices += len(uniq)
+                st.batches += 1
+                st.coalesced_reads += off_reads + nbr_reads
+                st.blocks_touched += len(touched)
+                st.bytes_gathered += sum(e - s
+                                         for s, e in off_ranges + nbr_ranges)
+                st.edges_returned += sum(len(d) for d in result)
+                st.device_batches += on_device
+                st.bytes_h2d += bytes_h2d
+                st.close_reasons[_close_reason] = \
+                    st.close_reasons.get(_close_reason, 0) + 1
+                st.latencies.add(latency)
+            bsp.event("window_close", reason=_close_reason)
         if self._hotset is not None:
             # trace-driven prefetch AFTER the request is answered and its
             # latency folded: predicted-hot vertices warm the tier on the
@@ -595,16 +627,23 @@ class NeighborQueryEngine:
         cand = np.sort(self._hotset.prefetch_candidates())
         if cand.size == 0:
             return
-        f, own = self._open()
-        try:
-            spans, _, _ = self._gather_offsets(cand, f)
-            packed, _, _ = self._gather_packed(spans, f)
-        finally:
-            if own:
-                f.close()
-        decoded, _ = self._decode_host(packed)
-        for v, d in zip(cand, decoded):
-            self._hotset.fill(int(v), d, prefetch=True)
+        # own span (tier=gather so a direct engine call may root here):
+        # prefetch time is the tier warming itself, deliberately OUTSIDE
+        # the request's query.batch span
+        with self._tracer.span("query.prefetch", tier="gather",
+                               candidates=int(cand.size)):
+            f, own = self._open()
+            try:
+                spans, _, _ = self._gather_offsets(cand, f)
+                packed, _, _ = self._gather_packed(spans, f)
+            finally:
+                if own:
+                    f.close()
+            with self._tracer.span("query.decode", tier="decode",
+                                   mode="host"):
+                decoded, _ = self._decode_host(packed)
+            for v, d in zip(cand, decoded):
+                self._hotset.fill(int(v), d, prefetch=True)
 
     def neighbors_batch_ragged(self, vertices) -> tuple:
         """Ragged (CSR-shard) form of :meth:`neighbors_batch`: returns

@@ -106,6 +106,10 @@ class HotSetStats:
     evicted: int = 0          # entries the clock sweep revoked
     pinned: int = 0           # CURRENT pinned entries (degree-pinned)
     prefetch_fills: int = 0   # admitted entries that arrived via prefetch
+    prefetch_hits: int = 0    # prefetched entries later answered a lookup
+                              # (counted once: the first hit clears the
+                              # prefetched mark)
+    prefetch_evicted: int = 0  # prefetched entries revoked before any hit
     hit_edges: int = 0        # neighbor ids served from the tier
     resident_bytes: int = 0   # CURRENT budget charge
     resident_entries: int = 0  # CURRENT resident vertices
@@ -124,10 +128,19 @@ class HotSetStats:
                 and self.fills
                 == self.admitted + self.bypassed + self.rejected)
 
+    @property
+    def prefetch_hit_rate(self) -> float:
+        """Fraction of prefetched entries that went on to answer a
+        lookup — prefetch effectiveness (gated in the bench lane)."""
+        return (self.prefetch_hits / self.prefetch_fills
+                if self.prefetch_fills else 0.0)
+
     def as_dict(self) -> dict:
         with self._lock:
             d = dataclasses.asdict(self)
         d["hit_rate"] = (d["hits"] / d["lookups"] if d["lookups"] else 0.0)
+        d["prefetch_hit_rate"] = (d["prefetch_hits"] / d["prefetch_fills"]
+                                  if d["prefetch_fills"] else 0.0)
         return d
 
     def _snapshot(self) -> "HotSetStats":
@@ -182,6 +195,9 @@ class _Entry:
     nbytes: int          # budget charge (BYTES_PER_EDGE * degree)
     pinned: bool
     ref: bool = True     # second-chance bit, set on every hit
+    prefetched: bool = False  # arrived via prefetch, no lookup hit yet
+                              # (outcome lands in prefetch_hits or
+                              # prefetch_evicted, exactly once)
 
 
 class HotSetCache:
@@ -318,6 +334,10 @@ class HotSetCache:
                         continue
                     st.hits += 1
                     st.hit_edges += e.degree
+                    if e.prefetched:
+                        # the prefetch paid off; count the outcome once
+                        st.prefetch_hits += 1
+                e.prefetched = False
                 e.ref = True
                 out[v] = self._fetch(e)
         return out
@@ -378,7 +398,7 @@ class HotSetCache:
                     st.rejected += 1
                 return False
             self._entries[v] = _Entry(self._place(decoded), degree,
-                                      nbytes, pinned)
+                                      nbytes, pinned, prefetched=prefetch)
             self._resident_bytes += nbytes
             self._attempted.discard(v)
             if pinned:
@@ -429,6 +449,10 @@ class HotSetCache:
             self._resident_bytes -= e.nbytes
             with st._lock:
                 st.evicted += 1
+                if e.prefetched:
+                    # revoked before any lookup hit: the prefetch was
+                    # wasted budget (the other prefetch outcome)
+                    st.prefetch_evicted += 1
                 st.resident_bytes = self._resident_bytes
                 st.resident_entries = len(self._entries)
         return self._resident_bytes + nbytes <= self.plan.budget_bytes

@@ -73,6 +73,7 @@ import numpy as np
 from repro.core import paragrapher
 from repro.core import policy as _policy
 from repro.graph.partition import shard_ranges
+from repro.obs.trace import NULL_TRACER
 from repro.query.engine import NeighborQueryEngine, merge_query_stats
 
 
@@ -154,7 +155,8 @@ class ShardedQueryService:
                  hotset_bytes: Optional[int] = None,
                  open_kwargs=None,
                  engine_kwargs=None,
-                 clock: Callable[[], float] = time.perf_counter):
+                 clock: Callable[[], float] = time.perf_counter,
+                 tracer=None):
         if plan is not None:
             n_shards = plan.n_shards if n_shards is None else n_shards
             replication = (plan.replication if replication is None
@@ -176,6 +178,11 @@ class ShardedQueryService:
         self.replication = replication
         self.routing = routing
         self._clock = clock
+        # ONE tracer shared with every replica engine (and, through
+        # them, every PG-Fuse mount): nesting is per-thread state on
+        # the tracer itself, so the route span below parents the
+        # engines' gather spans only when the instances are shared
+        self._tracer = tracer if tracer is not None else NULL_TRACER
         # every shard derives the same global plan from the same file —
         # the no-communication property split_plan gives the loader
         with paragrapher.open_graph(path) as g:
@@ -207,6 +214,8 @@ class ShardedQueryService:
                     e_kw = dict(ekw(s, r))
                     e_kw.setdefault("decode", decode)
                     e_kw.setdefault("clock", clock)
+                    if tracer is not None:
+                        e_kw.setdefault("tracer", tracer)
                     if hotset_bytes is not None:
                         # one hot set PER replica: each simulated process
                         # owns its range's hubs, like its PG-Fuse mount
@@ -316,8 +325,12 @@ class ShardedQueryService:
                 if k + 1 < len(row):
                     with self.router._lock:
                         self.router.reroutes += 1
+                    # lands on the current route span (event count
+                    # reconciles with RouterStats.reroutes)
+                    self._tracer.event("reroute", shard=s, replica=r)
         with self.router._lock:
             self.router.failed_batches += 1
+        self._tracer.event("shard_failed", shard=s)
         raise last_err
 
     def neighbors_batch(self, vertices) -> List[np.ndarray]:
@@ -340,19 +353,25 @@ class ShardedQueryService:
         rt = self.router
         with rt._lock:
             rt.batches += 1
-        for s in np.unique(sids):
-            idx = np.nonzero(sids == s)[0]
-            lists = self._shard_batch(int(s), v[idx])
-            for i, lst in zip(idx.tolist(), lists):
-                out[i] = lst
-            # fold per shard AS each batch lands: a later shard's
-            # failure leaves every answered shard's routing and engine
-            # counters reconciled (conservation holds mid-failure)
-            with rt._lock:
-                s, k = int(s), int(idx.size)
-                rt.requests += k
-                rt.routed_by_shard[s] = rt.routed_by_shard.get(s, 0) + k
-                rt.shard_batches[s] = rt.shard_batches.get(s, 0) + 1
+        # the route span's SELF time is the scatter/gather machinery;
+        # each shard's engine work nests inside as gather/storage/decode
+        with self._tracer.span("route.batch", tier="route",
+                               vertices=int(v.size),
+                               shards=int(np.unique(sids).size)):
+            for s in np.unique(sids):
+                idx = np.nonzero(sids == s)[0]
+                lists = self._shard_batch(int(s), v[idx])
+                for i, lst in zip(idx.tolist(), lists):
+                    out[i] = lst
+                # fold per shard AS each batch lands: a later shard's
+                # failure leaves every answered shard's routing and
+                # engine counters reconciled (conservation holds
+                # mid-failure)
+                with rt._lock:
+                    s, k = int(s), int(idx.size)
+                    rt.requests += k
+                    rt.routed_by_shard[s] = rt.routed_by_shard.get(s, 0) + k
+                    rt.shard_batches[s] = rt.shard_batches.get(s, 0) + 1
         return out
 
     def neighbors_batch_ragged(self, vertices) -> tuple:

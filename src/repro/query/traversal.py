@@ -70,7 +70,8 @@ from typing import Callable, List, Optional
 import numpy as np
 
 from repro.core import policy as _policy
-from repro.query.engine import LATENCY_WINDOW
+from repro.obs.metrics import LatencyHistogram
+from repro.obs.trace import NULL_TRACER
 
 #: default per-request scanned-edge budget (generous: bounded work per
 #: request is the contract, not a tight cap)
@@ -148,7 +149,7 @@ class TraversalResult:
 @dataclasses.dataclass
 class TraversalStats:
     """Service accounting, shaped like the engine's ``QueryStats``
-    (rolling latency window over the injectable clock, atomic
+    (bounded latency histogram over the injectable clock, atomic
     :meth:`reset` returning the pre-reset snapshot).
 
     Conservation invariants — asserted by the load/soak suite, held
@@ -170,7 +171,8 @@ class TraversalStats:
     edges_scanned: int = 0
     vertices_visited: int = 0
     truncated: int = 0         # completed requests a budget cut short
-    latencies_s: list = dataclasses.field(default_factory=list)
+    latencies: LatencyHistogram = dataclasses.field(
+        default_factory=LatencyHistogram)
 
     def __post_init__(self) -> None:
         # the lock is deliberately an attribute, not a field: asdict()
@@ -189,10 +191,7 @@ class TraversalStats:
 
     def latency_quantile(self, q: float) -> float:
         with self._lock:
-            lat = list(self.latencies_s)
-        if not lat:
-            return 0.0
-        return float(np.quantile(np.asarray(lat), q))
+            return self.latencies.quantile(q)
 
     @property
     def p50_s(self) -> float:
@@ -206,13 +205,11 @@ class TraversalStats:
         with self._lock:
             d = {f.name: getattr(self, f.name)
                  for f in dataclasses.fields(self)}
-            lat = d.pop("latencies_s")
+            hist = d.pop("latencies")
             d["requests_by_kind"] = dict(d["requests_by_kind"])
-            d["n_latencies"] = len(lat)
-            d["p50_s"] = (float(np.quantile(np.asarray(lat), 0.50))
-                          if lat else 0.0)
-            d["p99_s"] = (float(np.quantile(np.asarray(lat), 0.99))
-                          if lat else 0.0)
+            d["n_latencies"] = hist.n
+            d["p50_s"] = hist.quantile(0.50)
+            d["p99_s"] = hist.quantile(0.99)
         d["shed_rate"] = (d["shed"] / d["submitted"]
                           if d["submitted"] else 0.0)
         return d
@@ -221,7 +218,7 @@ class TraversalStats:
         """A consistent copy taken under the stats lock."""
         with self._lock:
             return dataclasses.replace(
-                self, latencies_s=list(self.latencies_s),
+                self, latencies=self.latencies.copy(),
                 requests_by_kind=dict(self.requests_by_kind))
 
     def merge(self, other: "TraversalStats") -> "TraversalStats":
@@ -229,8 +226,8 @@ class TraversalStats:
         instance) — the traversal-side sibling of
         :meth:`repro.query.QueryStats.merge`, for folding several
         services' (or shards') accounting into fleet totals: counters
-        sum, ``requests_by_kind`` sums key-wise, latency samples
-        concatenate untrimmed.  Each operand is snapshotted under its
+        sum, ``requests_by_kind`` sums key-wise, latency histograms
+        merge bucket-wise.  Each operand is snapshotted under its
         own lock, so merging races cleanly with concurrent
         admit/complete folds and with :meth:`reset`; both conservation
         invariants (``submitted == admitted + shed``,
@@ -240,13 +237,13 @@ class TraversalStats:
         a, b = self._snapshot(), other._snapshot()
         out = TraversalStats()
         for f in dataclasses.fields(out):
-            if f.name in ("latencies_s", "requests_by_kind"):
+            if f.name in ("latencies", "requests_by_kind"):
                 continue
             setattr(out, f.name, getattr(a, f.name) + getattr(b, f.name))
         for src in (a.requests_by_kind, b.requests_by_kind):
             for k, v in src.items():
                 out.requests_by_kind[k] = out.requests_by_kind.get(k, 0) + v
-        out.latencies_s = a.latencies_s + b.latencies_s
+        out.latencies = a.latencies.merge(b.latencies)
         return out
 
     def reset(self) -> "TraversalStats":
@@ -260,13 +257,15 @@ class TraversalStats:
         """
         with self._lock:
             snap = dataclasses.replace(
-                self, latencies_s=list(self.latencies_s),
+                self, latencies=self.latencies.copy(),
                 requests_by_kind=dict(self.requests_by_kind))
             live = self.inflight
             for f in dataclasses.fields(self):
                 cur = getattr(self, f.name)
                 setattr(self, f.name,
-                        [] if isinstance(cur, list)
+                        LatencyHistogram()
+                        if isinstance(cur, LatencyHistogram)
+                        else [] if isinstance(cur, list)
                         else {} if isinstance(cur, dict) else 0)
             # the outstanding requests were admitted in THIS epoch now:
             # count them as submitted+admitted so the live invariant
@@ -346,11 +345,16 @@ class TraversalService:
     def __init__(self, engine, *,
                  admission: Optional["_policy.AdmissionPlan"] = None,
                  default_max_edges: int = DEFAULT_EDGE_BUDGET,
-                 clock: Optional[Callable[[], float]] = None):
+                 clock: Optional[Callable[[], float]] = None,
+                 tracer=None):
         self._engine = engine
         self.gate = AdmissionGate(admission)
         self.default_max_edges = int(default_max_edges)
         self._clock = clock if clock is not None else engine._clock
+        # share the backend's tracer by default so the request root
+        # span and the engine's gather spans land in ONE trace
+        self._tracer = (tracer if tracer is not None
+                        else getattr(engine, "_tracer", NULL_TRACER))
         self.stats = TraversalStats()
         self._executor = None
         self._executor_lock = threading.Lock()
@@ -508,9 +512,7 @@ class TraversalService:
             st = self.stats
             st.completed += 1
             st.inflight -= 1
-            st.latencies_s.append(float(latency_s))
-            if len(st.latencies_s) > LATENCY_WINDOW:
-                del st.latencies_s[0]
+            st.latencies.add(float(latency_s))
 
     def fail(self, req: TraversalRequest) -> None:
         """Release an admitted request that errored (clean per-request
@@ -522,17 +524,30 @@ class TraversalService:
 
     # -- the synchronous path ----------------------------------------------
     def request(self, req: TraversalRequest) -> TraversalResult:
-        """Admission-gated synchronous traversal."""
-        if not self.admit(req):
-            raise TraversalShed(
-                f"admission gate full "
-                f"({self.gate.inflight} in flight, "
-                f"{self.gate.edges_inflight} edge budget)")
-        t0 = self._clock()
-        res = self.perform(req)          # fail() runs inside on error
-        res.latency_s = self._clock() - t0
-        self.complete(req, res.latency_s)
-        return res
+        """Admission-gated synchronous traversal.
+
+        The request ROOT span: every engine gather span, PG-Fuse read
+        span and decode span this request causes nests under it, so one
+        sampled trace attributes the request's clock time across tiers
+        (``repro.obs.report.attribution``).  A shed is a zero-width
+        root with one ``shed`` event — sheds stay visible in traces and
+        their event count reconciles with ``TraversalStats.shed``.
+        """
+        with self._tracer.span("traversal.request", tier="request",
+                               kind=req.kind) as rsp:
+            if not self.admit(req):
+                rsp.event("shed", kind=req.kind)
+                raise TraversalShed(
+                    f"admission gate full "
+                    f"({self.gate.inflight} in flight, "
+                    f"{self.gate.edges_inflight} edge budget)")
+            t0 = self._clock()
+            res = self.perform(req)      # fail() runs inside on error
+            res.latency_s = self._clock() - t0
+            self.complete(req, res.latency_s)
+            rsp.set(hops=res.hops, edges=res.edges_scanned,
+                    truncated=bool(res.truncated))
+            return res
 
     def khop(self, seeds, k: int, *, max_edges: Optional[int] = None,
              max_vertices: Optional[int] = None) -> TraversalResult:
@@ -573,6 +588,10 @@ class TraversalService:
         from concurrent.futures import ThreadPoolExecutor
 
         if not self.admit(req):
+            # zero-width root span so async sheds are trace-visible too
+            with self._tracer.span("traversal.request", tier="request",
+                                   kind=req.kind) as rsp:
+                rsp.event("shed", kind=req.kind)
             raise TraversalShed("admission gate full")
         with self._executor_lock:
             if self._executor is None:
@@ -585,10 +604,16 @@ class TraversalService:
         t0 = self._clock()
 
         def _run() -> TraversalResult:
-            res = self.perform(req)      # fail() runs inside on error
-            res.latency_s = self._clock() - t0
-            self.complete(req, res.latency_s)
-            return res
+            # the root opens in the WORKER thread (spans propagate per
+            # thread), covering the executed portion of the request
+            with self._tracer.span("traversal.request", tier="request",
+                                   kind=req.kind) as rsp:
+                res = self.perform(req)  # fail() runs inside on error
+                res.latency_s = self._clock() - t0
+                self.complete(req, res.latency_s)
+                rsp.set(hops=res.hops, edges=res.edges_scanned,
+                        truncated=bool(res.truncated))
+                return res
 
         return executor.submit(_run)
 

@@ -44,6 +44,19 @@ import numpy as np
 CLOSE_REASONS = ("full", "plateau", "timeout", "flush", "direct")
 
 
+def close_reason_counts(close_reasons: dict) -> dict:
+    """Normalize a ``QueryStats.close_reasons`` dict onto the full
+    :data:`CLOSE_REASONS` axis (absent reasons become explicit zeros,
+    unknown keys raise).  The observability layer uses this to compare
+    stats counters against ``window_close`` span-event totals reason by
+    reason — both sides on one fixed axis."""
+    unknown = set(close_reasons) - set(CLOSE_REASONS)
+    if unknown:
+        raise ValueError(f"unknown close reasons {sorted(unknown)}; "
+                         f"expected a subset of {CLOSE_REASONS}")
+    return {r: int(close_reasons.get(r, 0)) for r in CLOSE_REASONS}
+
+
 class AdaptiveWindow:
     """Pure micro-batch window state machine (no threads, no engine).
 

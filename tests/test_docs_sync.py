@@ -6,6 +6,11 @@ Two layers of protection against docs drift:
   docs/graph_query_engine.md must be a SUBSET of the real
   ``as_dict()`` keys — renaming or dropping a counter without
   updating the table fails tier-1, not just the CI docs lane;
+* the per-prefix metric tables in docs/observability.md must equal
+  ``repro.obs.metrics.NAMESPACE`` EXACTLY (both directions), and the
+  namespace itself must match every live ``as_dict()`` surface — the
+  same check ``.github/scripts/metrics_drift.py`` gates in the docs CI
+  lane;
 * ``.github/scripts/docs_check.py`` (paths, ``file.py::symbol``
   anchors, dotted symbols, CLI flags across all of docs/ + README)
   must come back clean when run against the working tree.
@@ -22,6 +27,7 @@ from repro.query.hotset import HotSetStats
 
 ROOT = Path(__file__).resolve().parents[1]
 ENGINE_DOC = ROOT / "docs" / "graph_query_engine.md"
+OBS_DOC = ROOT / "docs" / "observability.md"
 
 
 def _table_keys(section_heading: str) -> set:
@@ -78,6 +84,43 @@ def test_hotset_stats_documented_contract_holds():
     for key in ("lookups", "hits", "misses", "fills", "admitted",
                 "bypassed", "rejected", "resident_bytes", "pinned"):
         assert key in keys
+
+
+def _obs_table_keys(prefix: str) -> set:
+    """Backticked first-column keys of the ``### `prefix` — ...``
+    namespace table in docs/observability.md."""
+    text = OBS_DOC.read_text()
+    m = re.search(rf"^### `{re.escape(prefix)}`.*?(?=^#{{2,3}} |\Z)",
+                  text, flags=re.S | re.M)
+    assert m, f"namespace table for {prefix!r} missing from {OBS_DOC.name}"
+    keys = set()
+    for line in m.group(0).splitlines():
+        if line.startswith("|"):
+            keys.update(re.findall(r"`(\w+)`", line.split("|")[1]))
+    assert keys, f"no table rows under {prefix!r} in {OBS_DOC.name}"
+    return keys
+
+
+def test_observability_namespace_tables_match_exactly():
+    """docs/observability.md documents EVERY key of every prefix of
+    repro.obs.metrics.NAMESPACE, and nothing else — equality, not
+    subset: the doc is the human-readable rendering of the literal the
+    CI drift gate enforces."""
+    from repro.obs.metrics import NAMESPACE
+    for prefix, keys in NAMESPACE.items():
+        documented = _obs_table_keys(prefix)
+        assert documented == set(keys), (
+            f"docs/observability.md table for {prefix!r} drifted: "
+            f"missing {sorted(set(keys) - documented)}, "
+            f"stale {sorted(documented - set(keys))}")
+
+
+def test_metrics_namespace_matches_live_surfaces():
+    """The other half of the chain: the namespace literal itself agrees
+    with the live as_dict() surfaces (metrics_drift is the function
+    .github/scripts/metrics_drift.py gates on in CI)."""
+    from repro.obs.metrics import metrics_drift
+    assert metrics_drift() == []
 
 
 def test_docs_check_script_is_clean():

@@ -1,0 +1,260 @@
+"""Metrics registry, namespace sync, and exposition lockdown.
+
+The registry's fold-on-register semantics must match each stats class's
+associative ``merge()`` (sum-kind keys add, ratios recompute from the
+folded parts, quantile summaries keep the max), the
+``repro.obs.metrics.NAMESPACE`` table must stay bidirectionally in sync
+with every live ``as_dict()`` surface (the same check
+``.github/scripts/metrics_drift.py`` gates in CI), and the exposition
+surfaces (Prometheus text, JSON snapshot, bench sidecar flattening)
+must be deterministic and re-parseable.
+"""
+
+import json
+
+import pytest
+
+from repro.obs.metrics import (MAX_KEYS, NAMESPACE, RATIO_SPECS,
+                               STATS_SOURCES, Counter, Gauge, Histogram,
+                               LatencyHistogram, MetricsRegistry,
+                               flatten_numeric, metrics_drift)
+from repro.query import QueryStats, TraversalStats
+from repro.query.window import CLOSE_REASONS, close_reason_counts
+
+
+def _qstats(requests, unique, batches, reasons, lat):
+    st = QueryStats()
+    st.requests, st.unique_vertices, st.batches = requests, unique, batches
+    for r in reasons:
+        st.close_reasons[r] = st.close_reasons.get(r, 0) + 1
+    for v in lat:
+        st.latencies.add(v)
+    return st
+
+
+# -- namespace sync --------------------------------------------------------
+
+def test_namespace_matches_every_live_stats_surface():
+    """The CI drift gate's exact check: zero violations between
+    NAMESPACE and the six live as_dict() surfaces, in either
+    direction."""
+    assert metrics_drift() == []
+
+
+def test_namespace_internal_consistency():
+    """Every ratio/max key must itself be a declared namespace key with
+    declared numerator/denominator parts, and every prefix must name a
+    loadable source."""
+    declared = {f"{p}.{k}" for p, keys in NAMESPACE.items() for k in keys}
+    for name, (nums, dens) in RATIO_SPECS.items():
+        assert name in declared, name
+        for part in nums + dens:
+            assert part in declared, (name, part)
+    for name in MAX_KEYS:
+        assert name in declared, name
+    assert set(NAMESPACE) == set(STATS_SOURCES)
+
+
+# -- registry fold semantics ----------------------------------------------
+
+def test_register_fold_matches_stats_merge():
+    """Registering two QueryStats dicts one after the other must agree
+    with registering their merge() once — for every key except the
+    quantile summaries, where the registry keeps the max (an upper
+    bound; a true merged quantile needs the histograms, which the
+    sharded service folds before registering)."""
+    a = _qstats(10, 4, 2, ["direct", "full"], [0.1, 0.2])
+    b = _qstats(6, 3, 3, ["direct", "timeout", "direct"], [0.3])
+    reg_seq = MetricsRegistry()
+    reg_seq.register_stats("query", a.as_dict())
+    reg_seq.register_stats("query", b.as_dict())
+    reg_one = MetricsRegistry()
+    reg_one.register_stats("query", a.merge(b).as_dict())
+    seq = reg_seq.snapshot()["metrics"]
+    one = reg_one.snapshot()["metrics"]
+    assert set(seq) == set(one)
+    for k in one:
+        if k in ("query.p50_s", "query.p99_s"):
+            continue
+        assert seq[k] == one[k], k
+    assert seq["query.p50_s"] == max(a.latency_quantile(0.5),
+                                     b.latency_quantile(0.5))
+    # ratio recomputed from folded parts == the merged dedup ratio
+    assert seq["query.dedup_ratio"] == (10 + 6) / (4 + 3)
+    # dict-valued keys flatten to per-subkey gauges and sum across folds
+    assert seq["query.close_reasons.direct"] == 3
+    assert reg_seq.snapshot()["sources"] == {"query": 2}
+
+
+def test_register_fold_recomputes_hotset_ratios():
+    """hit_rate / prefetch_hit_rate recompute from folded numerators
+    and denominators — NOT by averaging per-shard rates."""
+    reg = MetricsRegistry()
+    reg.register_stats("hotset", {"lookups": 100, "hits": 90,
+                                  "prefetch_fills": 10,
+                                  "prefetch_hits": 1,
+                                  "hit_rate": 0.9,
+                                  "prefetch_hit_rate": 0.1})
+    reg.register_stats("hotset", {"lookups": 900, "hits": 90,
+                                  "prefetch_fills": 0,
+                                  "prefetch_hits": 0,
+                                  "hit_rate": 0.1,
+                                  "prefetch_hit_rate": 0.0})
+    assert reg.get("hotset.hit_rate") == 180 / 1000
+    assert reg.get("hotset.prefetch_hit_rate") == 1 / 10
+    # a denominator of zero yields 0, never a ZeroDivisionError
+    empty = MetricsRegistry()
+    empty.register_stats("hotset", {"lookups": 0, "hits": 0,
+                                    "hit_rate": 0.0})
+    assert empty.get("hotset.hit_rate") == 0.0
+
+
+def test_register_handles_strings_and_max_keys():
+    """Non-numeric values land in the info side-channel (last write
+    wins), and MAX_KEYS fold by max (StreamStats' parallel wall
+    clock)."""
+    reg = MetricsRegistry()
+    reg.register_stats("stream", {"decode_mode": "host", "wall_s": 2.0,
+                                  "edges": 100})
+    reg.register_stats("stream", {"decode_mode": "device", "wall_s": 1.5,
+                                  "edges": 50})
+    assert reg.info["stream.decode_mode"] == "device"
+    assert reg.get("stream.wall_s") == 2.0
+    assert reg.get("stream.edges") == 150
+    # the stream rates recompute over the max wall clock
+    assert reg.get("stream.edges_per_s") == 150 / 2.0
+
+
+def test_registry_conservation_cross_checks():
+    """The invariants exposition relies on survive the fold: close
+    reasons sum to batches, and both traversal conservation identities
+    hold on folded totals."""
+    reg = MetricsRegistry()
+    for i in range(3):
+        reg.register_stats("query", _qstats(
+            8, 4, 2, ["direct", "plateau"], [0.1]).as_dict())
+        ts = TraversalStats()
+        ts.submitted, ts.admitted, ts.shed = 5, 4, 1
+        ts.completed, ts.failed, ts.inflight = 3, 1, 0
+        reg.register_stats("traversal", ts.as_dict())
+    close_total = sum(reg.get(f"query.close_reasons.{r}")
+                      for r in CLOSE_REASONS)
+    assert close_total == reg.get("query.batches") == 6
+    assert reg.get("traversal.submitted") == \
+        reg.get("traversal.admitted") + reg.get("traversal.shed")
+    assert reg.get("traversal.admitted") == \
+        reg.get("traversal.completed") + reg.get("traversal.failed") \
+        + reg.get("traversal.inflight")
+
+
+# -- exposition ------------------------------------------------------------
+
+def test_prometheus_text_and_json_roundtrip(tmp_path):
+    reg = MetricsRegistry()
+    reg.register_stats("query", _qstats(10, 4, 2, ["direct", "full"],
+                                        [0.1, 0.2]).as_dict())
+    reg.set("obs.sampled_traces", 5)
+    text = reg.to_prometheus()
+    assert "# TYPE repro_query_batches gauge\nrepro_query_batches 2" in text
+    assert "repro_query_close_reasons_direct 1" in text
+    assert "repro_obs_sampled_traces 5" in text
+    assert text.endswith("\n")
+    # every value line is "name number" and re-parses to the registry
+    lines = [ln for ln in text.splitlines() if not ln.startswith("#")]
+    assert len(lines) == len(reg.names()) == len(set(reg.names()))
+    for ln in lines:
+        name, val = ln.split(" ")
+        assert float(val) == reg.get(name.replace("repro_", "", 1)
+                                     .replace("_", ".")) \
+            or name.count("_") > 2   # dotted subkeys un-map ambiguously
+    path = tmp_path / "metrics.json"
+    reg.write_json(path)
+    snap = json.loads(path.read_text())
+    assert snap == reg.snapshot()
+    assert snap["metrics"]["query.requests"] == 10.0
+    assert list(snap["metrics"]) == sorted(snap["metrics"])
+
+
+def test_flatten_numeric_for_bench_sidecars():
+    nested = {"bench": "hotset", "tracked": {"advantage": 2.5},
+              "graph": {"scale": 13, "name": "rmat"},
+              "arms": {"hot": {"p50_s": 1e-3, "ok": True}},
+              "rows": [1, 2, 3]}
+    flat = flatten_numeric(nested)
+    assert flat == {"tracked.advantage": 2.5, "graph.scale": 13.0,
+                    "arms.hot.p50_s": 1e-3, "arms.hot.ok": 1.0}
+
+
+def test_metric_primitives():
+    c = Counter()
+    c.inc(), c.inc(2)
+    assert c.value == 3 and c.kind == "counter"
+    gauge = Gauge()
+    gauge.set(4.5)
+    assert gauge.value == 4.5 and gauge.kind == "gauge"
+    h = Histogram()
+    for v in (0.1, 0.2, 0.3):
+        h.observe(v)
+    assert h.kind == "histogram" and h.hist.n == 3
+    assert h.value == h.hist.quantile(0.5)
+
+
+# -- close-reason axis -----------------------------------------------------
+
+def test_close_reason_counts_normalizes_and_rejects_unknown():
+    full = close_reason_counts({"direct": 3, "full": 1})
+    assert set(full) == set(CLOSE_REASONS)
+    assert full["direct"] == 3 and full["plateau"] == 0
+    assert sum(full.values()) == 4
+    with pytest.raises(ValueError, match="unknown close reasons"):
+        close_reason_counts({"direct": 1, "oops": 2})
+
+
+# -- the serve-time fold over a live service -------------------------------
+
+def test_collect_service_metrics_folds_all_surfaces(tmp_path):
+    """``repro.launch.serve.collect_service_metrics`` registers every
+    surface a live traversal service exposes (traversal, query, pgfuse
+    — plus router on the sharded shape) and the snapshot satisfies the
+    conservation cross-checks."""
+    from repro.core import paragrapher
+    from repro.graph import rmat
+    from repro.launch.serve import collect_service_metrics
+    from repro.query import (NeighborQueryEngine, ShardedQueryService,
+                             TraversalService)
+
+    csr = rmat(9, 7, seed=42)
+    gp = str(tmp_path / "g.cbin")
+    paragrapher.save_graph(gp, csr, format="compbin")
+    open_kw = dict(pgfuse_block_size=512, pgfuse_readahead=0,
+                   pgfuse_eviction="clock")
+
+    g = paragrapher.open_graph(gp, use_pgfuse=True, **open_kw)
+    engine = NeighborQueryEngine(g, decode="host")
+    svc = TraversalService(engine)
+    try:
+        svc.khop([3, 71], 2)
+        reg = collect_service_metrics(svc)
+        m = reg.snapshot()["metrics"]
+        assert m["traversal.completed"] == 1
+        assert m["query.batches"] >= 1
+        assert m["pgfuse.underlying_reads"] >= 1
+        assert sum(m.get(f"query.close_reasons.{r}", 0)
+                   for r in CLOSE_REASONS) == m["query.batches"]
+    finally:
+        svc.close(), engine.close(), g.close()
+
+    with ShardedQueryService(gp, n_shards=2, replication=2,
+                             open_kwargs=open_kw) as sh:
+        trav = TraversalService(sh)
+        try:
+            trav.khop([3, 71], 2)
+            reg = collect_service_metrics(trav)
+            m = reg.snapshot()["metrics"]
+            assert m["router.requests"] >= 1
+            # one pgfuse fold per replica mount (2 shards x 2 replicas)
+            assert reg.snapshot()["sources"]["pgfuse"] == 4
+            assert m["traversal.submitted"] == \
+                m["traversal.admitted"] + m["traversal.shed"]
+        finally:
+            trav.close()

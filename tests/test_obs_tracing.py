@@ -1,0 +1,308 @@
+"""Span-tracing lockdown for the unified telemetry layer.
+
+Three properties, each load-bearing for the observability contract:
+
+* **event/stat conservation** — faults injected with
+  ``tests/conftest.py``'s ``FaultyStorage`` must appear as span events
+  whose counts equal the stats counters they shadow: ``"retry"`` vs
+  ``PGFuseStats.retried_reads``, ``"reroute"`` vs
+  ``RouterStats.reroutes``, ``"shed"`` vs ``TraversalStats.shed``, and
+  ``"window_close"`` reason totals vs ``QueryStats.close_reasons``;
+* **determinism** — two same-seed runs over the same request sequence
+  under an injected virtual clock produce bit-identical span trees
+  (``Span.as_dict()`` equality, ids and timestamps included);
+* **attribution** — a sharded traversal under the SimStorage charged
+  clock attributes >= 95% of each request's virtual time to the named
+  tiers (storage + decode carry ALL charged time, so routing/gather
+  machinery shows as exactly the zero self-time it costs in virtual
+  seconds).
+"""
+
+import errno
+
+import numpy as np
+import pytest
+
+from benchmarks.storage_sim import PROFILES, SimStorage
+from repro.core import paragrapher
+from repro.core.policy import AdmissionPlan
+from repro.graph import rmat
+from repro.obs import (NAMED_TIERS, Tracer, attribution, event_counts,
+                       render_report, verify_span_tree,
+                       window_close_counts)
+from repro.query import (NeighborQueryEngine, ShardedQueryService,
+                         TraversalRequest, TraversalService, TraversalShed,
+                         close_reason_counts)
+from tests.conftest import FaultyStorage
+
+BLOCK = 512
+OPEN_KW = dict(pgfuse_block_size=BLOCK, pgfuse_readahead=0,
+               pgfuse_eviction="clock", pgfuse_retry_backoff_s=0.0)
+
+
+@pytest.fixture
+def graph_file(tmp_path):
+    csr = rmat(9, 7, seed=42)
+    gp = str(tmp_path / "g.cbin")
+    paragrapher.save_graph(gp, csr, format="compbin")
+    return gp
+
+
+def _service(gp, tracer, **kw):
+    g = paragrapher.open_graph(gp, use_pgfuse=True, **dict(OPEN_KW, **kw))
+    engine = NeighborQueryEngine(g, decode="host", tracer=tracer)
+    return TraversalService(engine), engine, g
+
+
+class _Tick:
+    """Deterministic injectable clock: advances a fixed step per read,
+    so span timestamps depend only on the call sequence."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        self.t += 1e-6
+        return self.t
+
+
+# -- structure ------------------------------------------------------------
+
+def test_request_trace_structure_and_tiers(graph_file):
+    """One traversal request yields ONE root span (tier "request")
+    whose subtree passes structural validation and touches the gather,
+    storage and decode tiers — the span tree IS the request's path
+    through the stack."""
+    tracer = Tracer()
+    svc, engine, g = _service(graph_file, tracer)
+    try:
+        res = svc.khop([3, 71], 3)
+        assert res.vertices.size > 0
+    finally:
+        svc.close(), engine.close(), g.close()
+    traces = tracer.drain()
+    assert len(traces) == 1 and tracer.dropped_traces == 0
+    root = traces[0]
+    assert root.tier == "request" and root.attrs["kind"] == "khop"
+    assert root.attrs["hops"] == res.hops
+    assert verify_span_tree(root) == []
+    tiers = {s.tier for s in root.iter_spans()}
+    assert {"request", "gather", "storage", "decode"} <= tiers
+    # a second drain is empty: exposition consumed the retained traces
+    assert tracer.drain() == []
+
+
+def test_null_tracer_default_records_nothing(graph_file):
+    """The default (no tracer) serving path runs on NULL_TRACER: same
+    answers, no retained traces, no per-request allocations to drain."""
+    tracer = Tracer()
+    svc, engine, g = _service(graph_file, tracer)
+    try:
+        ref = svc.khop([3, 71], 3)
+    finally:
+        svc.close(), engine.close(), g.close()
+    svc, engine, g = _service(graph_file, None)
+    try:
+        res = svc.khop([3, 71], 3)
+        assert res.vertices.tolist() == ref.vertices.tolist()
+        assert engine._tracer.drain() == []
+        assert engine._tracer.traces == ()
+    finally:
+        svc.close(), engine.close(), g.close()
+
+
+def test_sampling_keeps_every_nth_root_and_bounds_retention(graph_file):
+    """``sample_every=3`` records roots 0, 3, 6, ... and suppresses the
+    whole subtree in between; ``max_traces`` bounds retention with
+    ``dropped_traces`` counting the overflow."""
+    tracer = Tracer(sample_every=3, max_traces=2)
+    svc, engine, g = _service(graph_file, tracer)
+    try:
+        for i in range(9):
+            svc.khop([i, i + 40], 2)
+    finally:
+        svc.close(), engine.close(), g.close()
+    assert len(tracer.traces) == 2 and tracer.dropped_traces == 1
+    # orphan non-root-tier spans (a storage read with no request
+    # context) are suppressed, never recorded as one-span traces
+    with tracer.span("pgfuse.read", tier="storage"):
+        pass
+    assert len(tracer.traces) == 2
+
+
+# -- event/stat conservation ----------------------------------------------
+
+def test_retry_events_equal_retried_reads(graph_file):
+    """Two transient EIOs healed by per-mount retries: the trace shows
+    exactly two ``"retry"`` events on storage spans, equal to
+    ``PGFuseStats.retried_reads``."""
+    tracer = Tracer()
+    svc, engine, g = _service(graph_file, tracer, pgfuse_retries=2)
+    fs = FaultyStorage()
+    fs.fail_at[1] = OSError(errno.EIO, "flaky OST")
+    fs.fail_at[4] = OSError(errno.EIO, "flaky OST")
+    fs.install_graph(g)
+    try:
+        svc.khop([3, 71], 3)
+        assert g.pgfuse_stats().retried_reads == 2
+        traces = tracer.drain()
+        assert event_counts(traces, "retry") == 2
+        retry_spans = [s for root in traces for s in root.iter_spans()
+                       if any(e.name == "retry" for e in s.events)]
+        assert retry_spans and all(s.tier == "storage"
+                                   for s in retry_spans)
+        for s in retry_spans:
+            for e in s.events:
+                if e.name == "retry":
+                    assert e.attrs["errno"] == errno.EIO
+    finally:
+        svc.close(), engine.close(), g.close()
+
+
+def test_reroute_events_equal_router_reroutes(graph_file):
+    """replication=2 with an EIO burst on one replica's mount: every
+    failover the router performs appears as a ``"reroute"`` event on
+    the route span, count equal to ``RouterStats.reroutes``."""
+    tracer = Tracer()
+    with ShardedQueryService(graph_file, n_shards=2, replication=2,
+                             open_kwargs=OPEN_KW, tracer=tracer) as svc:
+        (a0, a1), _ = svc.ranges
+        fs = FaultyStorage().install_graph(svc.replicas[0][0].graph)
+        for i in range(fs.n_calls + 1, fs.n_calls + 401):
+            fs.fail_at[i] = OSError(errno.EIO, "dead OST")
+        v = np.arange(a0, a1, dtype=np.int64)[:64]
+        svc.neighbors_batch(v)
+        svc.neighbors_batch(v)
+        rd = svc.router.as_dict()
+        assert rd["reroutes"] >= 1 and rd["failed_batches"] == 0
+        traces = tracer.drain()
+        assert event_counts(traces, "reroute") == rd["reroutes"]
+        assert event_counts(traces, "shard_failed") == 0
+        for root in traces:
+            assert root.tier == "route"
+            assert verify_span_tree(root) == []
+
+
+def test_shed_events_equal_traversal_shed(graph_file):
+    """Admission sheds are trace-visible: each shed is a zero-width
+    request root carrying one ``"shed"`` event, and the event total
+    equals ``TraversalStats.shed`` — on both the sync and async
+    paths."""
+    tracer = Tracer()
+    svc, engine, g = _service(graph_file, tracer)
+    svc.gate.plan = AdmissionPlan(max_inflight=1, max_edges_inflight=1 << 30,
+                                  servers=1, slo_s=0.5,
+                                  reason="test: one-request gate")
+    try:
+        blocker = TraversalRequest("khop", [1], k=1, max_edges=64)
+        assert svc.admit(blocker)           # occupy the whole gate
+        with pytest.raises(TraversalShed):
+            svc.khop([3, 71], 2)            # sync shed
+        with pytest.raises(TraversalShed):
+            svc.submit(TraversalRequest("khop", [5], k=1))  # async shed
+        st = svc.stats
+        assert st.shed == 2
+        traces = tracer.drain()
+        shed_roots = [r for r in traces if r.event_count("shed")]
+        assert event_counts(shed_roots, "shed") == st.shed
+        for r in shed_roots:
+            assert r.tier == "request" and not r.children
+        svc.perform(blocker)
+        svc.complete(blocker, 0.0)
+        assert svc.stats.conserved
+    finally:
+        svc.close(), engine.close(), g.close()
+
+
+def test_window_close_events_reconcile_with_close_reasons(graph_file):
+    """With every batch traced, per-reason ``window_close`` event totals
+    equal ``QueryStats.close_reasons`` on the full
+    ``repro.query.window.CLOSE_REASONS`` axis."""
+    tracer = Tracer()
+    g = paragrapher.open_graph(graph_file, use_pgfuse=True, **OPEN_KW)
+    engine = NeighborQueryEngine(g, decode="host", tracer=tracer)
+    try:
+        rng = np.random.default_rng(0)
+        for _ in range(7):
+            engine.neighbors_batch(rng.integers(0, engine.n_vertices, 16))
+        st = engine.stats.as_dict()
+        counted = close_reason_counts(st["close_reasons"])
+        assert sum(counted.values()) == st["batches"] == 7
+        traced = window_close_counts(tracer.drain())
+        assert {k: v for k, v in counted.items() if v} == traced
+    finally:
+        engine.close(), g.close()
+
+
+# -- determinism ----------------------------------------------------------
+
+def _traced_run(gp) -> list:
+    tracer = Tracer(clock=_Tick(), seed=0)
+    svc, engine, g = _service(gp, tracer)
+    try:
+        svc.khop([3, 71], 3)
+        svc.bfs_visit([5], max_vertices=64)
+        svc.shortest_path(3, 200)
+        return [r.as_dict() for r in tracer.drain()]
+    finally:
+        svc.close(), engine.close(), g.close()
+
+
+def test_same_seed_span_trees_bit_identical(graph_file):
+    """Two same-seed runs of the same request sequence under the
+    injected tick clock: span ids, timestamps, attrs, events and tree
+    shape are ALL identical — the serialized trees compare equal."""
+    first, second = _traced_run(graph_file), _traced_run(graph_file)
+    assert len(first) == 3
+    assert first == second
+
+
+# -- attribution ----------------------------------------------------------
+
+def test_sharded_traversal_attribution_coverage(graph_file):
+    """The acceptance bar: a sharded traversal under the SimStorage
+    charged clock attributes >= 95% of each request's virtual time to
+    named tiers.  The virtual clock advances ONLY inside charged
+    storage reads and charged decode, both of which happen inside
+    storage/decode spans — so named-tier coverage is structural, not a
+    tuning accident."""
+    storage = SimStorage(PROFILES["lustre_ssd"])
+    vdecode = [0.0]
+
+    def clock() -> float:
+        return storage.charged_s + vdecode[0]
+
+    tracer = Tracer(clock=clock, seed=0)
+    svc = ShardedQueryService(
+        graph_file, n_shards=2, decode="host", clock=clock, tracer=tracer,
+        open_kwargs=dict(OPEN_KW, pgfuse_pread_fn=storage.pread))
+    for row in svc.replicas:                    # bench decode-cost model
+        for rep in row:
+            orig = rep.engine._decode_host
+            b = rep.graph.bytes_per_id
+
+            def charged(packed, _orig=orig, _b=b):
+                vdecode[0] += (sum(p.size for p in packed) // _b) / 5.0e7
+                return _orig(packed)
+
+            rep.engine._decode_host = charged
+    trav = TraversalService(svc, tracer=tracer)
+    try:
+        trav.khop([3, 71], 3)
+        trav.bfs_visit([5], max_vertices=256)
+        traces = tracer.drain()
+        assert len(traces) == 2
+        for root in traces:
+            assert verify_span_tree(root) == []
+            att = attribution(root)
+            assert att["total_s"] > 0
+            assert att["coverage"] >= 0.95, att
+            # storage + decode carry the charged time; the other named
+            # tiers exist in the tree but cost ~nothing virtual
+            assert att["tiers"]["storage"] + att["tiers"]["decode"] > 0
+        report = render_report(traces)
+        assert "coverage" in report
+        for tier in NAMED_TIERS:
+            assert tier in report
+    finally:
+        trav.close(), svc.close()

@@ -93,7 +93,7 @@ def test_engine_stats_dedup_and_blocks(graph_on_disk):
         assert st.dedup_ratio == 2.0
         assert st.batches == 1 and st.blocks_touched > 0
         assert st.coalesced_reads > 0 and st.bytes_gathered > 0
-        assert len(st.latencies_s) == 1
+        assert st.latencies.n == 1
         assert st.p99_s >= st.p50_s >= 0.0
         d = st.as_dict()
         assert d["dedup_ratio"] == 2.0 and d["n_latencies"] == 1
@@ -114,8 +114,12 @@ def test_engine_virtual_clock_latency(graph_on_disk):
     with paragrapher.open_graph(gp, **RANDOM_KW) as g:
         engine = NeighborQueryEngine(g, clock=clock)
         engine.neighbors_batch([1, 2, 3])
-        # one tick at entry, one at exit -> latency exactly 1.0
-        assert engine.stats.latencies_s == [1.0]
+        # one tick at entry, one at exit -> latency exactly 1.0 (the
+        # histogram clamps constant distributions to the observed value)
+        assert engine.stats.latencies.n == 1
+        assert engine.stats.latency_quantile(0.5) == 1.0
+        assert engine.stats.latencies.min_s == 1.0
+        assert engine.stats.latencies.max_s == 1.0
 
 
 # ---------------------------------------------------------------------------

@@ -20,7 +20,10 @@ import pytest
 
 from repro.core import paragrapher
 from repro.graph import rmat, synthesize_node_features
-from repro.query import HotSetCache, NeighborQueryEngine
+from repro.obs import (Tracer, event_counts, verify_span_tree,
+                       window_close_counts)
+from repro.query import (HotSetCache, NeighborQueryEngine,
+                         close_reason_counts)
 from tests._prop import Draw, prop
 from tests.conftest import FaultyStorage
 
@@ -49,6 +52,28 @@ def _zipf_trace(draw: Draw, n_vertices: int, n_batches: int) -> list:
                 hubs[draw.ints(0, len(hubs) - 1, k)]
         trace.append(ids)
     return trace
+
+
+def _check_span_conservation(name, engine, g=None) -> None:
+    """Per-arm span/stats books after a fuzzed trace: every retained
+    span tree is structurally valid, the per-reason ``window_close``
+    event totals equal the arm's ``close_reasons`` counters, and (when
+    the arm's mount is passed) ``retry`` events equal the mount's
+    ``retried_reads`` — faults the stats counted are trace-visible,
+    one for one."""
+    tracer = engine._tracer
+    if not tracer.enabled:
+        return
+    traces = tracer.drain()
+    assert tracer.dropped_traces == 0, name
+    for root in traces:
+        assert verify_span_tree(root) == [], (name, root.name)
+    counted = close_reason_counts(engine.stats.as_dict()["close_reasons"])
+    assert window_close_counts(traces) == \
+        {k: v for k, v in counted.items() if v}, name
+    if g is not None:
+        assert event_counts(traces, "retry") == \
+            g.pgfuse_stats().retried_reads, name
 
 
 def _check_trace(trace, engines, csr) -> None:
@@ -91,10 +116,13 @@ def test_differential_host_device_csr(draw: Draw):
                 paragrapher.open_graph(gp, **kw) as gd, \
                 paragrapher.open_graph(gp, **kw) as gs:
             engines = {
-                "host": NeighborQueryEngine(gh, decode="host"),
-                "device": NeighborQueryEngine(gd, decode="device"),
+                "host": NeighborQueryEngine(gh, decode="host",
+                                            tracer=Tracer()),
+                "device": NeighborQueryEngine(gd, decode="device",
+                                              tracer=Tracer()),
                 "hotset": NeighborQueryEngine(gs, decode="host",
-                                              hotset=_hot_cache(draw)),
+                                              hotset=_hot_cache(draw),
+                                              tracer=Tracer()),
             }
             _check_trace(_zipf_trace(draw, csr.n_vertices, 4), engines, csr)
             # the device engine really took the kernel path whenever it
@@ -107,6 +135,9 @@ def test_differential_host_device_csr(draw: Draw):
             assert hs.conserved
             assert hs.resident_bytes <= \
                 engines["hotset"].hotset.plan.budget_bytes
+            # each arm carries its own tracer: span books balance per arm
+            for name, e in engines.items():
+                _check_span_conservation(name, e)
 
 
 @prop(6)
@@ -142,18 +173,24 @@ def test_differential_under_fault_injection(draw: Draw):
                         inj.fail_at[k] = OSError(errno.EIO, "flaky OST")
                 injectors[name] = inj.install_graph(g)
             engines = {
-                "host": NeighborQueryEngine(gh, decode="host"),
-                "device": NeighborQueryEngine(gd, decode="device"),
+                "host": NeighborQueryEngine(gh, decode="host",
+                                            tracer=Tracer()),
+                "device": NeighborQueryEngine(gd, decode="device",
+                                              tracer=Tracer()),
                 "hotset": NeighborQueryEngine(gs, decode="host",
-                                              hotset=_hot_cache(draw)),
+                                              hotset=_hot_cache(draw),
+                                              tracer=Tracer()),
             }
             _check_trace(_zipf_trace(draw, csr.n_vertices, 3), engines, csr)
             assert engines["hotset"].hotset.stats.conserved
-            # injected EIOs that fired were absorbed by the retry policy
+            # injected EIOs that fired were absorbed by the retry policy,
+            # and every retry the mount counted is a trace-visible
+            # "retry" event on a storage span of that arm
             for name, g in (("host", gh), ("device", gd), ("hotset", gs)):
                 fired = sum(1 for (_, _, _, n) in injectors[name].calls
                             if n == -1)
                 assert g.pgfuse_stats().retried_reads >= fired
+                _check_span_conservation(name, engines[name], g)
 
 
 @pytest.mark.parametrize("decode", ["host", "device"])

@@ -21,8 +21,9 @@ import pytest
 from repro.core import paragrapher, policy
 from repro.graph import rmat
 from repro.graph.partition import shard_ranges
+from repro.obs import Tracer, verify_span_tree, window_close_counts
 from repro.query import (NeighborQueryEngine, ShardedQueryService,
-                         TraversalService)
+                         TraversalService, close_reason_counts)
 from tests._prop import Draw, prop
 from tests.test_traversal_differential import _assert_matches, ref_traverse
 
@@ -42,6 +43,11 @@ def _sharded(path, draw, decode="host", **kw):
             # the hot-set arm: every shard replica carries the HBM tier
             # of decoded runs, and answers must STAY byte-identical
             kw.setdefault("hotset_bytes", draw.choice([1 << 12, 1 << 16]))
+    # every fuzzed service run is fully traced (sample_every=1) so
+    # _check_conservation can reconcile span events against the stats
+    # counters they shadow; max_traces is high enough that retention
+    # never truncates the count-based checks
+    kw.setdefault("tracer", Tracer(max_traces=100_000))
     return ShardedQueryService(path, n_shards=n_shards,
                                replication=replication, decode=decode,
                                open_kwargs=okw, **kw)
@@ -75,6 +81,20 @@ def _check_conservation(svc):
                       "resident_bytes"):
             assert sum(getattr(s, field) for s in per) == \
                 getattr(hs, field), field
+    # span/stats conservation (services built by _sharded carry a full-
+    # sampling tracer): every retained trace is structurally valid and
+    # the per-reason window_close event totals equal the merged
+    # close_reasons counters — the service's replica engines are the
+    # only traced batches, so the books balance exactly
+    tracer = svc._tracer
+    if tracer.enabled:
+        traces = tracer.drain()
+        assert tracer.dropped_traces == 0
+        for root in traces:
+            assert verify_span_tree(root) == [], root.name
+        counted = close_reason_counts(merged.as_dict()["close_reasons"])
+        assert window_close_counts(traces) == \
+            {k: v for k, v in counted.items() if v}
 
 
 @prop(8)

@@ -9,6 +9,12 @@ mutations a live service performs: per-batch folds and atomic
 ``reset()``.  The stress tests here race all three and demand that no
 batch is ever lost or double-counted and that every merged snapshot
 satisfies the invariants at every instant.
+
+Latency retention is a bounded :class:`repro.obs.metrics
+.LatencyHistogram` (the old raw lists grew without bound and merge
+concatenated them untrimmed); its merge is EXACTLY associative —
+integer bucket counts plus min/max, no float accumulation — so fold
+results are pinned bit-for-bit here.
 """
 
 import threading
@@ -16,6 +22,7 @@ import threading
 import numpy as np
 import pytest
 
+from repro.obs.metrics import LatencyHistogram
 from repro.query import QueryStats, TraversalStats, merge_query_stats
 
 
@@ -24,7 +31,8 @@ def _qstats(requests=0, unique=0, batches=0, reasons=(), lat=()):
     st.requests, st.unique_vertices, st.batches = requests, unique, batches
     for r in reasons:
         st.close_reasons[r] = st.close_reasons.get(r, 0) + 1
-    st.latencies_s = list(lat)
+    for v in lat:
+        st.latencies.add(v)
     return st
 
 
@@ -35,7 +43,8 @@ def test_query_stats_merge_sums_and_preserves_invariant():
     assert (m.requests, m.unique_vertices, m.batches) == (16, 7, 5)
     assert m.close_reasons == {"direct": 3, "full": 1, "timeout": 1}
     assert sum(m.close_reasons.values()) == m.batches
-    assert m.latencies_s == [0.1, 0.2, 0.3]
+    assert m.latencies.n == 3
+    assert m.latencies.min_s == 0.1 and m.latencies.max_s == 0.3
     # merge is a pure fold: operands untouched, result independent
     assert a.requests == 10 and b.requests == 6
     m.requests += 1
@@ -51,7 +60,7 @@ def test_query_stats_merge_associative():
     left = a.merge(b).merge(c)
     right = a.merge(b.merge(c))
     assert left.as_dict() == right.as_dict()
-    assert left.latencies_s == right.latencies_s
+    assert left.latencies == right.latencies
     # merge_query_stats is the same left fold
     assert merge_query_stats([a, b, c]).as_dict() == left.as_dict()
     assert merge_query_stats([]).requests == 0
@@ -68,7 +77,8 @@ def _tstats(submitted, admitted, shed, completed, failed, inflight,
                      inflight)
     for k in kinds:
         st.requests_by_kind[k] = st.requests_by_kind.get(k, 0) + 1
-    st.latencies_s = list(lat)
+    for v in lat:
+        st.latencies.add(v)
     return st
 
 
@@ -81,7 +91,7 @@ def test_traversal_stats_merge_sums_and_conserves():
     assert (m.completed, m.failed, m.inflight) == (7, 1, 1)
     assert m.conserved
     assert m.requests_by_kind == {"khop": 2, "bfs": 1}
-    assert m.latencies_s == [0.1, 0.2, 0.3]
+    assert m.latencies.n == 3
     left = a.merge(b).merge(a)
     right = a.merge(b.merge(a))
     assert left.as_dict() == right.as_dict()
@@ -104,7 +114,7 @@ def test_query_stats_concurrent_merge_vs_fold_vs_reset():
                 st.batches += 1
                 st.close_reasons["direct"] = \
                     st.close_reasons.get("direct", 0) + 1
-                st.latencies_s.append(0.001)
+                st.latencies.add(0.001)
 
     def resetter():
         for _ in range(50):
@@ -129,6 +139,8 @@ def test_query_stats_concurrent_merge_vs_fold_vs_reset():
     assert total.requests == 3 * N_FOLDS * N_THREADS
     assert total.close_reasons == {"direct": N_FOLDS * N_THREADS}
     assert sum(total.close_reasons.values()) == total.batches
+    # latency samples reconcile too: reset/merge never drop or double
+    assert total.latencies.n == N_FOLDS * N_THREADS
 
 
 def test_traversal_stats_concurrent_merge_vs_reset():
@@ -148,7 +160,7 @@ def test_traversal_stats_concurrent_merge_vs_reset():
             with st._lock:
                 st.inflight -= 1
                 st.completed += 1
-                st.latencies_s.append(0.001)
+                st.latencies.add(0.001)
 
     def resetter():
         for _ in range(40):
@@ -175,17 +187,56 @@ def test_traversal_stats_concurrent_merge_vs_reset():
     assert total.completed == 3 * N_REQ
     assert total.inflight == 0 and total.shed == 0
     assert total.conserved
+    assert total.latencies.n == 3 * N_REQ
 
 
-def test_merge_untrimmed_latencies_keep_associativity():
-    """merge() concatenates latency samples UNTRIMMED: trimming to the
-    rolling window inside merge would make (a+b)+c drop different
-    samples than a+(b+c).  The window applies at fold time (engine) and
-    quantile time, never inside the fold."""
-    from repro.query.engine import LATENCY_WINDOW
-    a = _qstats(lat=[0.1] * LATENCY_WINDOW)
-    b = _qstats(lat=[0.2] * LATENCY_WINDOW)
-    c = _qstats(lat=[0.3])
-    left, right = a.merge(b).merge(c), a.merge(b.merge(c))
-    assert len(left.latencies_s) == 2 * LATENCY_WINDOW + 1
-    assert left.latencies_s == right.latencies_s
+def test_latency_histogram_merge_exactly_associative_and_bounded():
+    """The histogram replaces the old untrimmed-list concatenation: its
+    merge must be EXACTLY associative (bit-for-bit, not approximately —
+    integer bucket counts and min/max only), its memory bounded by the
+    bucket table regardless of sample count, and the merged quantiles a
+    pure function of the merged state (fold order invisible)."""
+    rng = np.random.default_rng(7)
+    samples = rng.lognormal(mean=-6.0, sigma=2.0, size=9000)
+    parts = [LatencyHistogram() for _ in range(3)]
+    for i, v in enumerate(samples):
+        parts[i % 3].add(float(v))
+    a, b, c = parts
+    left = a.merge(b).merge(c)
+    right = a.merge(b.merge(c))
+    assert left == right == c.merge(a).merge(b)
+    assert left.n == samples.size
+    # bounded: bucket count can never exceed the fixed table size
+    from repro.obs.metrics import HIST_N_BUCKETS
+    assert len(left.counts) <= HIST_N_BUCKETS + 2
+    # quantiles of the fold match quantiles of one big histogram
+    one = LatencyHistogram()
+    for v in samples:
+        one.add(float(v))
+    assert left.quantile(0.5) == one.quantile(0.5)
+    assert left.quantile(0.99) == one.quantile(0.99)
+
+
+def test_latency_quantile_pins_old_list_behavior():
+    """Regression pin for the list -> histogram swap: p50/p99 stay
+    within one bucket width (2%) of the exact np.quantile values the
+    bench gates were tuned on, and are EXACT for the constant
+    virtual-clock distributions the unit tests pin."""
+    rng = np.random.default_rng(0)
+    samples = rng.lognormal(mean=-5.5, sigma=1.5, size=8000)
+    st = _qstats(lat=[float(v) for v in samples])
+    for q in (0.5, 0.9, 0.99):
+        exact = float(np.quantile(samples, q))
+        est = st.latency_quantile(q)
+        assert abs(est - exact) <= 0.021 * exact, (q, exact, est)
+    # constant distribution: exact (clamped to observed min/max)
+    st2 = _qstats(lat=[0.00308] * 37)
+    assert st2.latency_quantile(0.5) == pytest.approx(0.00308, abs=0)
+    assert st2.latency_quantile(0.99) == pytest.approx(0.00308, abs=0)
+    # empty: 0.0, matching the old empty-list behavior
+    assert QueryStats().latency_quantile(0.5) == 0.0
+    assert TraversalStats().latency_quantile(0.99) == 0.0
+    # the as_dict surface agrees with latency_quantile
+    d = st2.as_dict()
+    assert d["p50_s"] == st2.latency_quantile(0.5)
+    assert d["n_latencies"] == 37

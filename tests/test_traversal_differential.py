@@ -16,8 +16,10 @@ import pytest
 
 from repro.core import paragrapher
 from repro.graph import rmat
+from repro.obs import (Tracer, event_counts, verify_span_tree,
+                       window_close_counts)
 from repro.query import (NeighborQueryEngine, TraversalError,
-                         TraversalService)
+                         TraversalService, close_reason_counts)
 from tests._prop import Draw, prop
 
 
@@ -105,8 +107,29 @@ def _service(path, draw_or_none, decode="host", **kw):
     # decoded-run tier must leave every traversal field bit-identical
     hotset = (draw_or_none.choice([None, 1 << 12, 1 << 16])
               if draw_or_none else None)
-    engine = NeighborQueryEngine(g, decode=decode, hotset=hotset)
+    # full-sampling tracer on every fuzzed service: the TraversalService
+    # shares the engine's tracer, so _check_spans can reconcile the
+    # retained span trees against the stats counters afterwards
+    engine = NeighborQueryEngine(g, decode=decode, hotset=hotset,
+                                 tracer=Tracer(max_traces=100_000))
     return TraversalService(engine, **kw), engine, g
+
+
+def _check_spans(svc, engine) -> None:
+    """Span/stats conservation after a fuzzed run: structurally valid
+    trees, one ``"request"`` root per submitted traversal, ``"shed"``
+    events equal to the shed counter, and per-reason ``window_close``
+    event totals equal to the engine's ``close_reasons``."""
+    traces = engine._tracer.drain()
+    assert engine._tracer.dropped_traces == 0
+    for root in traces:
+        assert verify_span_tree(root) == [], root.name
+    st = svc.stats
+    assert sum(1 for r in traces if r.tier == "request") == st.submitted
+    assert event_counts(traces, "shed") == st.shed
+    counted = close_reason_counts(engine.stats.as_dict()["close_reasons"])
+    assert window_close_counts(traces) == \
+        {k: v for k, v in counted.items() if v}
 
 
 @prop(10)
@@ -151,6 +174,7 @@ def test_khop_and_bfs_match_csr_reference(draw: Draw):
             if engine.hotset is not None:
                 assert engine.hotset.stats.conserved
                 assert "hotset" in svc.as_dict()
+            _check_spans(svc, engine)
         finally:
             svc.close(), engine.close(), g.close()
 
@@ -185,6 +209,7 @@ def test_shortest_path_matches_csr_reference(draw: Draw):
                     assert res.path[0] == src and res.path[-1] == dst
                     for a, b in zip(res.path[:-1], res.path[1:]):
                         assert int(b) in csr.neighbors_of(int(a)).tolist()
+            _check_spans(svc, engine)
         finally:
             svc.close(), engine.close(), g.close()
 
@@ -214,6 +239,8 @@ def test_device_decode_arm_matches_host_and_reference(draw: Draw):
             # the device service really decoded on the kernel whenever
             # it had edges to decode
             assert eng_d.stats.device_batches == eng_d.stats.batches
+            _check_spans(svc_h, eng_h)
+            _check_spans(svc_d, eng_d)
         finally:
             svc_h.close(), eng_h.close(), g_h.close()
             svc_d.close(), eng_d.close(), g_d.close()

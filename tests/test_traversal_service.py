@@ -252,7 +252,7 @@ def test_querystats_reset_atomic_under_concurrent_batches(graph_file):
             # the invariant holds on EVERY epoch cut, not just quiescent
             assert sum(snap.close_reasons.values()) == snap.batches, \
                 (snap.batches, snap.close_reasons)
-            assert len(snap.latencies_s) <= snap.batches
+            assert snap.latencies.n <= snap.batches
             total_batches += snap.batches
         total_batches += engine.stats.batches
         assert total_batches == n_threads * per_thread
