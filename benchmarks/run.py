@@ -145,6 +145,22 @@ def _suite_hotset(args):
                out=args.hotset_out)
 
 
+def _suite_reorder(args):
+    """Offline graph compiler (BFS locality reorder + LogCSR re-encode,
+    inverse-permutation sidecar) vs the scrambled original on the same
+    logical zipf trace and capped PG-Fuse budget -> BENCH_reorder.json
+    (hit-rate gain gated upward with a hard in-bench floor, compiled-arm
+    virtual-clock p50/p99 gated downward)."""
+    from benchmarks import reorder
+
+    print("=" * 72)
+    print("Reorder — locality compile vs scrambled order (emits BENCH json)")
+    print("=" * 72)
+    return reorder.run(workdir=args.workdir, profile=args.profile,
+                scale=13 if args.fast else 16,
+                out=args.reorder_out)
+
+
 #: registered suites, executed in order by default — add new benchmark
 #: harnesses here so ``python -m benchmarks.run`` stays the one entry
 #: point that emits every artifact (CSV blocks and BENCH_*.json alike)
@@ -155,6 +171,7 @@ SUITES = {
     "traversal": _suite_traversal,
     "sharded": _suite_sharded,
     "hotset": _suite_hotset,
+    "reorder": _suite_reorder,
 }
 
 
@@ -179,6 +196,8 @@ def main() -> None:
                     help="where the sharded suite writes its BENCH json")
     ap.add_argument("--hotset-out", default="BENCH_hotset.json",
                     help="where the hotset suite writes its BENCH json")
+    ap.add_argument("--reorder-out", default="BENCH_reorder.json",
+                    help="where the reorder suite writes its BENCH json")
     args = ap.parse_args()
 
     picked = [s.strip() for s in args.suites.split(",") if s.strip()]

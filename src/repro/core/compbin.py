@@ -39,7 +39,6 @@ from __future__ import annotations
 
 import dataclasses
 import io
-import math
 import os
 import struct
 import threading
@@ -79,12 +78,18 @@ def reset_host_decoded_bytes() -> int:
 
 
 def bytes_per_vertex(n_vertices: int) -> int:
-    """``b = ceil(log2(|V|)/8)`` (paper §IV). At least 1, at most 8."""
+    """``b = ceil(log2(|V|)/8)`` (paper §IV). At least 1, at most 8.
+
+    Computed with INTEGER bit arithmetic over the maximum representable
+    id, ``|V| - 1``: the obvious ``math.ceil(math.log2(n) / 8)`` breaks
+    at large ``|V|`` where the float rounds — e.g. ``log2(2**56 + 1)``
+    rounds to exactly 56.0, yielding b=7 while the max id ``2**56``
+    needs 8 bytes, so the encoder crashed on its own header's promise.
+    ``(|V|-1).bit_length()`` is exact at every fence.
+    """
     if n_vertices < 0:
         raise ValueError("n_vertices must be >= 0")
-    if n_vertices <= 2:
-        return 1
-    return max(1, math.ceil(math.log2(n_vertices) / 8))
+    return min(8, max(1, (max(n_vertices - 1, 1).bit_length() + 7) // 8))
 
 
 def encode_ids(ids: np.ndarray, b: int) -> np.ndarray:
@@ -98,7 +103,11 @@ def encode_ids(ids: np.ndarray, b: int) -> np.ndarray:
     ids = np.ascontiguousarray(ids, dtype=np.uint64)
     if ids.size and int(ids.max(initial=0)) >= (1 << (8 * b)) and b < 8:
         raise ValueError(f"vertex ID {int(ids.max())} does not fit in {b} bytes")
-    as_bytes = ids.view(np.uint8).reshape(-1, 8)  # little-endian platform bytes
+    # explicit little-endian view: a platform-endianness ``view(np.uint8)``
+    # silently wrote byte-swapped ids on big-endian hosts (the wire format
+    # is LE by definition — eq. (1) shifts low byte first)
+    le = np.ascontiguousarray(ids, dtype="<u8")
+    as_bytes = le.view(np.uint8).reshape(-1, 8)
     return np.ascontiguousarray(as_bytes[:, :b]).reshape(-1)
 
 
@@ -176,6 +185,38 @@ class CompBinHeader:
     def total_size(self) -> int:
         return self.neighbors_start + self.b * self.n_edges
 
+    # -- the direct-addressing contract (core/codec.py) -------------------
+    # These three methods are what makes a header consumable by the
+    # random-access query engine without it knowing the codec: byte span
+    # of a run of offsets, decode of that span, and the vertex gap that
+    # corresponds to a byte merge gap.
+    def offsets_span(self, a: int, z: int) -> tuple[int, int]:
+        """(byte start, byte length) covering ``offsets[a ..= z+1]``."""
+        return self.offsets_start + 8 * a, 8 * (z - a + 2)
+
+    def decode_offsets(self, raw: bytes, a: int, z: int) -> np.ndarray:
+        """int64 ``offsets[a ..= z+1]`` from an :meth:`offsets_span` read."""
+        return np.frombuffer(raw, dtype="<u8",
+                             count=z - a + 2).astype(np.int64)
+
+    def offsets_gap_vertices(self, gap_bytes: int) -> int:
+        """How many vertices a byte merge gap spans in the offsets array."""
+        return max(1, gap_bytes // 8)
+
+
+def _file_size(f) -> Optional[int]:
+    """Best-effort size of a file-like object (None when undeterminable)."""
+    size = getattr(f, "size", None)
+    if isinstance(size, int):
+        return size
+    try:
+        pos = f.tell()
+        end = f.seek(0, os.SEEK_END)
+        f.seek(pos)
+        return int(end)
+    except (OSError, ValueError, AttributeError):
+        return None
+
 
 def read_header(f) -> CompBinHeader:
     f.seek(0)
@@ -187,7 +228,22 @@ def read_header(f) -> CompBinHeader:
         raise ValueError(f"bad magic {magic!r}; not a CompBin file")
     if version != VERSION:
         raise ValueError(f"unsupported CompBin version {version}")
-    return CompBinHeader(b=b, flags=flags, n_vertices=n_v, n_edges=n_e)
+    # A corrupt header must fail HERE with a clean error, not downstream
+    # as a ZeroDivisionError (b=0) or a garbage decode (b>8, impossible
+    # sizes): every field the direct-addressing arithmetic divides or
+    # seeks by is validated before a single payload byte is trusted.
+    hdr = CompBinHeader(b=b, flags=flags, n_vertices=n_v, n_edges=n_e)
+    if not 1 <= b <= 8:
+        raise IOError(f"corrupt CompBin header: b={b} outside [1, 8]")
+    if flags & ~FLAG_SORTED:
+        raise IOError(f"corrupt CompBin header: unknown flags 0x{flags:x}")
+    actual = _file_size(f)
+    if actual is not None and actual < hdr.total_size:
+        raise IOError(
+            f"corrupt/truncated CompBin file: header promises "
+            f"{hdr.total_size} bytes (|V|={n_v}, |E|={n_e}, b={b}) but "
+            f"the file holds {actual}")
+    return hdr
 
 
 class CompBinFile:
@@ -207,8 +263,22 @@ class CompBinFile:
         else:
             self._f = file
             self._own = False
+        # reads must be positional: the engine's executor calls
+        # neighbors_of/read_edge_range concurrently, and an unlocked
+        # seek+read pair interleaves (thread A seeks, thread B seeks,
+        # thread A reads B's bytes).  Prefer the file's own pread (the
+        # PG-Fuse handle has one); otherwise serialize seek+read.
+        self._lock = threading.Lock()
+        self._pread_fn = getattr(self._f, "pread", None)
         self.header = read_header(self._f)
         self._offsets_cache: Optional[np.ndarray] = None
+
+    def _pread(self, start: int, nbytes: int) -> bytes:
+        if self._pread_fn is not None:
+            return self._pread_fn(start, nbytes)
+        with self._lock:
+            self._f.seek(start)
+            return self._f.read(nbytes)
 
     # -- metadata ---------------------------------------------------------
     @property
@@ -230,8 +300,8 @@ class CompBinFile:
             v1 = self.n_vertices
         if self._offsets_cache is not None:
             return self._offsets_cache[v0 : v1 + 1]
-        self._f.seek(self.header.offsets_start + 8 * v0)
-        raw = self._f.read(8 * (v1 - v0 + 1))
+        raw = self._pread(self.header.offsets_start + 8 * v0,
+                          8 * (v1 - v0 + 1))
         return np.frombuffer(raw, dtype="<u8").astype(np.int64)
 
     def preload_offsets(self) -> None:
@@ -241,8 +311,7 @@ class CompBinFile:
     def read_edge_range(self, e0: int, e1: int) -> np.ndarray:
         """Decode neighbors[e0:e1] (global edge indices) — eq. (1)."""
         b = self.header.b
-        self._f.seek(self.header.neighbors_start + b * e0)
-        raw = self._f.read(b * (e1 - e0))
+        raw = self._pread(self.header.neighbors_start + b * e0, b * (e1 - e0))
         return decode_ids(np.frombuffer(raw, dtype=np.uint8), b)
 
     def neighbors_of(self, v: int) -> np.ndarray:
@@ -268,8 +337,7 @@ class CompBinFile:
         Pallas decode kernel so the (4-b)/4 bandwidth saving also applies to
         host->HBM and HBM->VMEM traffic (see kernels/compbin_decode)."""
         b = self.header.b
-        self._f.seek(self.header.neighbors_start + b * e0)
-        raw = self._f.read(b * (e1 - e0))
+        raw = self._pread(self.header.neighbors_start + b * e0, b * (e1 - e0))
         return np.frombuffer(raw, dtype=np.uint8)
 
     def close(self) -> None:

@@ -29,21 +29,23 @@ from typing import Callable, Iterable, Optional, Sequence, Union
 
 import numpy as np
 
-from repro.core import compbin, pgfuse, webgraph
+from repro.core import codec, pgfuse, webgraph
 from repro.core.csr import CSR
 
 FORMAT_COMPBIN = "compbin"
 FORMAT_WEBGRAPH = "webgraph"
+FORMAT_LOGCSR = "logcsr"
 
 
 def detect_format(path: Union[str, os.PathLike]) -> str:
+    """Codec name for ``path``, dispatched on the 4-byte magic through
+    the :mod:`repro.core.codec` registry."""
     with open(path, "rb") as f:
         magic = f.read(4)
-    if magic == compbin.MAGIC:
-        return FORMAT_COMPBIN
-    if magic == webgraph.MAGIC:
-        return FORMAT_WEBGRAPH
-    raise ValueError(f"{path}: unknown graph format (magic {magic!r})")
+    spec = codec.codec_for_magic(magic)
+    if spec is None:
+        raise ValueError(f"{path}: unknown graph format (magic {magic!r})")
+    return spec.name
 
 
 @dataclasses.dataclass
@@ -108,9 +110,9 @@ class GraphHandle:
             rdr = self._reader()  # validates header eagerly
             self.n_vertices = rdr.n_vertices
             self.n_edges = rdr.n_edges
-            # CompBin bytes/ID (§IV); 0 for formats without fixed-width IDs
-            self.bytes_per_id = rdr.b if isinstance(rdr, compbin.CompBinFile) \
-                else 0
+            # fixed bytes/ID of direct codecs (§IV packing); 0 for
+            # formats without fixed-width IDs (bit-coded WebGraph)
+            self.bytes_per_id = getattr(rdr, "b", 0)
             rdr.close()
         except BaseException:
             # a failed open must not strand the mount: unwind the retain
@@ -131,11 +133,11 @@ class GraphHandle:
 
     def _reader(self):
         f = self._open_file()
-        if self.format == FORMAT_COMPBIN:
-            return compbin.CompBinFile(f)
-        if self.format == FORMAT_WEBGRAPH:
-            return webgraph.WebGraphFile(f)
-        raise ValueError(f"unknown format {self.format!r}")
+        try:
+            return codec.get_codec(self.format).open(f)
+        except BaseException:
+            f.close()
+            raise
 
     # -- synchronous (blocking) API ------------------------------------------
     def read_full(self) -> CSR:
@@ -162,9 +164,10 @@ class GraphHandle:
         """Like :meth:`read_partition` but WITHOUT host decode: returns
         (rebased offsets, packed neighbor bytes, bytes-per-ID).
 
-        Only CompBin supports this — its packed stream is decodable on
-        device (kernels/compbin_decode), so the (4-b)/4 byte saving extends
-        to the host->device transfer.  WebGraph's bit-level codes need the
+        Only direct-addressing codecs (CompBin, LogCSR) support this —
+        their packed streams are decodable on device
+        (kernels/compbin_decode), so the (4-b)/4 byte saving extends to
+        the host->device transfer.  WebGraph's bit-level codes need the
         sequential host decoder; callers should route through
         :func:`repro.core.policy.choose_stream_decode`.
         """
@@ -172,9 +175,10 @@ class GraphHandle:
             raise ValueError(f"bad partition [{v0},{v1}) for |V|={self.n_vertices}")
         rdr = self._reader()
         try:
-            if not isinstance(rdr, compbin.CompBinFile):
-                raise ValueError(
-                    f"raw partition reads require CompBin, not {self.format!r}")
+            if not hasattr(rdr, "raw_neighbor_bytes"):
+                raise ValueError(f"raw partition reads require a "
+                                 f"direct-addressing codec, "
+                                 f"not {self.format!r}")
             offs = rdr.offsets(v0, v1)
             raw = rdr.raw_neighbor_bytes(int(offs[0]), int(offs[-1]))
             return (offs - offs[0]).astype(np.int64), raw, rdr.b
@@ -213,7 +217,7 @@ class GraphHandle:
         """Edge-balanced contiguous vertex ranges (for distributed loaders)."""
         rdr = self._reader()
         try:
-            if isinstance(rdr, compbin.CompBinFile):
+            if hasattr(rdr, "offsets"):
                 offs = rdr.offsets()
             else:
                 offs = rdr.bit_offsets()  # bit offsets ~ edge mass proxy
@@ -397,8 +401,6 @@ def open_graph(path: Union[str, os.PathLike], *, format: str = "auto",
 
 def save_graph(path: Union[str, os.PathLike], csr: CSR, *,
                format: str = FORMAT_COMPBIN, k: int = webgraph.DEFAULT_K) -> int:
-    if format == FORMAT_COMPBIN:
-        return compbin.write_compbin(path, csr)
-    if format == FORMAT_WEBGRAPH:
+    if format == FORMAT_WEBGRAPH:  # k is a WebGraph-only knob
         return webgraph.write_webgraph(path, csr, k)
-    raise ValueError(f"unknown format {format!r}")
+    return codec.get_codec(format).write(path, csr)

@@ -667,6 +667,11 @@ class CachedFileHandle:
         self._pos += len(data)
         return data
 
+    def pread(self, offset: int, size: int) -> bytes:
+        """Positional read — does NOT touch the seek cursor, so codec
+        readers sharing one handle across threads need no lock."""
+        return self._cf.pread(offset, size)
+
     def close(self) -> None:  # the underlying cache outlives handles
         pass
 

@@ -83,22 +83,25 @@ def choose_stream_decode(format: str, b: int = 0,
                          model: SystemModel | None = None) -> StreamDecodePlan:
     """Per-graph decode placement for the streaming loader.
 
-    CompBin with b <= 4 ships the *packed* bytes and decodes on device —
-    the (4-b)/4 byte saving then applies to host->HBM traffic too, and the
-    VPU shift+adds are free next to the gather they feed.  CompBin with
-    b > 4 means |V| >= 2^32: IDs overflow the kernel's int32 lanes, so the
-    host decodes to int64.  WebGraph's gamma/zeta bit codes are inherently
-    sequential (paper §II-A) and always decode on host; whether WebGraph
-    is worth reading at all is :func:`choose_format`'s job, which trades
-    its smaller storage footprint against its ~100x slower decode.
+    Direct-addressing codecs (CompBin, LogCSR — both pack neighbors as
+    eq. (1) byte streams) with b <= 4 ship the *packed* bytes and decode
+    on device — the (4-b)/4 byte saving then applies to host->HBM
+    traffic too, and the VPU shift+adds are free next to the gather they
+    feed.  b > 4 means |V| >= 2^32: IDs overflow the kernel's int32
+    lanes, so the host decodes to int64.  WebGraph's gamma/zeta bit
+    codes are inherently sequential (paper §II-A) and always decode on
+    host; whether WebGraph is worth reading at all is
+    :func:`choose_format`'s job, which trades its smaller storage
+    footprint against its ~100x slower decode.
     """
-    if format == "compbin":
+    if format in ("compbin", "logcsr"):
+        fmt = "CompBin" if format == "compbin" else "LogCSR"
         if 1 <= b <= 4:
             return StreamDecodePlan(
-                "device", f"CompBin b={b}: packed stream fits int32 lanes; "
+                "device", f"{fmt} b={b}: packed stream fits int32 lanes; "
                           f"H2D moves {b}/4 of the decoded bytes")
         return StreamDecodePlan(
-            "host", f"CompBin b={b}: IDs exceed int32; host decodes to int64")
+            "host", f"{fmt} b={b}: IDs exceed int32; host decodes to int64")
     if format == "webgraph":
         return StreamDecodePlan(
             "host", "WebGraph gamma/zeta codes are bit-sequential; no device path")
@@ -450,6 +453,64 @@ def choose_hotset_admission(n_vertices: int, n_edges: int,
                f"{pin_degree} (<= {pin_fraction:.0%} of {budget_bytes} B); "
                f"{place}-resident runs "
                f"({'ids fit int32 lanes' if place == 'device' else 'ids overflow int32 lanes'})")
+
+
+@dataclasses.dataclass
+class ReorderPlan:
+    """Vertex-ordering strategy for the offline graph compiler
+    (:func:`repro.graph.reorder.compile_graph`).
+
+    ``strategy`` is one of ``"bfs"`` (level order from a max-degree
+    root — the locality permutation that clusters each neighborhood's
+    ids), ``"degree"`` (hubs first — the cheap frequency clustering),
+    or ``"identity"`` (keep the input order).
+    """
+
+    strategy: str   # "bfs" | "degree" | "identity"
+    reason: str
+
+
+REORDER_STRATEGIES = ("bfs", "degree", "identity")
+
+
+def choose_reorder(n_vertices: int, n_edges: int, *,
+                   strategy: Optional[str] = None) -> ReorderPlan:
+    """Pick the locality permutation the graph compiler applies.
+
+    BFS order from a max-degree root is the default: it places each
+    neighborhood's vertices near each other, so a query's packed-byte
+    reads land in fewer PG-Fuse blocks and the ids inside a row become
+    numerically close (the property Log(Graph)/Zuckerli-style encodings
+    exploit; see PAPERS.md).  Degree order is the fallback when the
+    graph is too sparse for BFS levels to mean anything — with mean
+    degree < 1 most components are singletons and BFS degenerates to
+    the component scan, so the cheap hubs-first sort (frequency
+    clustering: the hot set lands in the first blocks) wins on compile
+    time.  Edgeless graphs keep their order — any permutation is noise.
+    An explicit ``strategy`` overrides the heuristic (the CLI flag).
+    """
+    if n_vertices < 0 or n_edges < 0:
+        raise ValueError("n_vertices and n_edges must be >= 0")
+    if strategy is not None:
+        if strategy not in REORDER_STRATEGIES:
+            raise ValueError(f"unknown reorder strategy {strategy!r} "
+                             f"(expected one of {REORDER_STRATEGIES})")
+        return ReorderPlan(strategy=strategy,
+                           reason=f"explicit strategy {strategy!r}")
+    if n_edges == 0:
+        return ReorderPlan(
+            strategy="identity",
+            reason="edgeless graph: no locality to recover")
+    mean = n_edges / max(1, n_vertices)
+    if mean < 1.0:
+        return ReorderPlan(
+            strategy="degree",
+            reason=f"mean degree {mean:.2f} < 1: BFS levels degenerate; "
+                   f"hubs-first sort clusters the hot set cheaply")
+    return ReorderPlan(
+        strategy="bfs",
+        reason=f"mean degree {mean:.2f}: level order from a max-degree "
+               f"root clusters neighborhoods into few blocks")
 
 
 def choose_stream_parts(n_devices_total: int = 1, process_count: int = 1,

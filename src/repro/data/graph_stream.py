@@ -345,10 +345,11 @@ class GraphStream:
             if nbr_shard is not None:
                 neighbors = jax.device_put(neighbors, nbr_shard)
             h2d = host_nbrs.nbytes
-            if self._graph.format == "compbin":
-                # packed bytes this partition decoded on the host — tallied
-                # per stream, NOT via compbin's process-global counter,
-                # which concurrent streams (multi-host simulator) share
+            if self._graph.bytes_per_id > 0:
+                # fixed-width packed bytes this partition decoded on the
+                # host (any direct codec) — tallied per stream, NOT via
+                # compbin's process-global counter, which concurrent
+                # streams (multi-host simulator) share
                 self.stats.host_decode_bytes += n * self._graph.bytes_per_id
             else:
                 self.stats.host_decode_bytes += host_nbrs.nbytes

@@ -8,4 +8,8 @@ from repro.graph.generators import erdos_renyi, rmat  # noqa: F401
 from repro.graph.partition import (edge_balanced_partition,  # noqa: F401
                                    resplit_from_stats, split_plan,
                                    stream_shares_from_stats)
+from repro.graph.reorder import (CompileReport, bfs_order,  # noqa: F401
+                                 compile_graph, degree_order,
+                                 invert_permutation, map_back, permute_csr,
+                                 read_sidecar, write_sidecar)
 from repro.graph.sampler import NeighborSampler, SampledBlock  # noqa: F401

@@ -136,3 +136,26 @@ def compbin_decode(packed: jnp.ndarray, b: int, *, block_rows: int = 256,
     if interpret is None:
         interpret = interpret_default()
     return _decode_impl(packed.reshape(-1), b, n, block_rows, interpret)
+
+
+#: codec name -> device stream decoder ``(raw_u8, b) -> (int64 ids,
+#: bytes_h2d)``.  This is the op-surface registry the query engine and
+#: streaming loader resolve through (repro.core.codec declares WHICH
+#: codecs are direct; this maps each to its device decode).  LogCSR
+#: byte-packs neighbors exactly like CompBin, so one kernel serves both;
+#: a codec with a different packed layout registers its own entry.
+PACKED_STREAM_DECODERS = {
+    "compbin": decode_packed_stream,
+    "logcsr": decode_packed_stream,
+}
+
+
+def packed_stream_decoder(codec_name: str):
+    """The device stream decoder registered for ``codec_name``."""
+    try:
+        return PACKED_STREAM_DECODERS[codec_name]
+    except KeyError:
+        raise ValueError(
+            f"no device stream decoder registered for codec "
+            f"{codec_name!r}; registered: "
+            f"{', '.join(sorted(PACKED_STREAM_DECODERS))}") from None

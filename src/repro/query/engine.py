@@ -57,9 +57,10 @@ from typing import Callable, List, Optional, Sequence
 
 import numpy as np
 
+from repro.core import codec as _codec
 from repro.core import compbin
 from repro.core import policy as _policy
-from repro.core.paragrapher import FORMAT_COMPBIN, GraphHandle
+from repro.core.paragrapher import GraphHandle
 from repro.obs.metrics import LatencyHistogram
 from repro.obs.trace import NULL_TRACER
 from repro.query.window import AdaptiveWindow
@@ -294,11 +295,12 @@ class NeighborQueryEngine:
                  hotset=None,
                  clock: Callable[[], float] = time.perf_counter,
                  tracer=None):
-        if graph.format != FORMAT_COMPBIN:
+        if not _codec.get_codec(graph.format).direct:
             raise ValueError(
-                f"random-access queries need CompBin's fixed-width direct "
-                f"addressing, not {graph.format!r} (WebGraph requires a "
-                f"sequential decode per block of vertices)")
+                f"random-access queries need a direct-addressing codec "
+                f"({', '.join(_codec.direct_codecs())}), not "
+                f"{graph.format!r} (WebGraph requires a sequential decode "
+                f"per block of vertices)")
         if decode not in DECODE_MODES:
             raise ValueError(f"decode must be one of {DECODE_MODES}, "
                              f"got {decode!r}")
@@ -401,11 +403,15 @@ class NeighborQueryEngine:
         via coalesced range reads of the offsets array.
 
         Returns (int64 array of shape (len(uniq), 2), n_reads, byte
-        ranges read).  Consecutive vertices share the boundary word;
-        runs closer than the merge gap collapse into one read.
+        ranges read).  Consecutive vertices share the boundary entry;
+        runs closer than the merge gap collapse into one read.  All the
+        codec-specific addressing lives in the header's contract methods
+        (``offsets_span`` / ``decode_offsets`` / ``offsets_gap_vertices``
+        — see :mod:`repro.core.codec`), so CompBin's plain u64 array and
+        LogCSR's bit-packed one take the same path here.
         """
         h = self._header
-        gap_vertices = max(1, self.merge_gap // 8)
+        gap_vertices = h.offsets_gap_vertices(self.merge_gap)
         runs: List[tuple] = []       # (v_start, v_end) inclusive vertex runs
         for v in uniq:
             v = int(v)
@@ -418,10 +424,9 @@ class NeighborQueryEngine:
         n_reads = 0
         i = 0
         for a, z in runs:
-            start = h.offsets_start + 8 * a
-            nbytes = 8 * (z - a + 2)       # offsets[a ..= z+1]
+            start, nbytes = h.offsets_span(a, z)   # offsets[a ..= z+1]
             raw = self._read_range(f, start, nbytes)
-            words = np.frombuffer(raw, dtype="<u8").astype(np.int64)
+            words = h.decode_offsets(raw, a, z)
             n_reads += 1
             byte_ranges.append((start, start + nbytes))
             while i < len(uniq) and a <= int(uniq[i]) <= z:
@@ -487,8 +492,11 @@ class NeighborQueryEngine:
         """Eq. (1) on the device: the batch's merged packed runs ship as
         ONE transfer, the Pallas kernel decodes them, and the flat id
         stream is split back into per-span views — bit-identical to
-        :meth:`_decode_host`.  Returns (decoded arrays, H2D bytes)."""
-        from repro.kernels.compbin_decode import decode_packed_stream
+        :meth:`_decode_host`.  The decoder is resolved per codec through
+        the kernel op surface's registry (LogCSR shares CompBin's packed
+        neighbor layout, hence its kernel).  Returns (decoded arrays,
+        H2D bytes)."""
+        from repro.kernels.compbin_decode import packed_stream_decoder
 
         if not packed:
             return [], 0
@@ -496,7 +504,8 @@ class NeighborQueryEngine:
         if int(lens.sum()) == 0:
             return [np.zeros(0, np.int64) for _ in packed], 0
         allbytes = np.concatenate(packed)
-        ids, nbytes_h2d = decode_packed_stream(allbytes, self._b)
+        decode_stream = packed_stream_decoder(self._graph.format)
+        ids, nbytes_h2d = decode_stream(allbytes, self._b)
         # per-span COPIES, matching the host path's independent arrays:
         # handing out views into the flat batch buffer would let one
         # retained hub list pin the whole batch's decoded ids

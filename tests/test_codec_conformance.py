@@ -1,0 +1,238 @@
+"""Codec conformance: every registered codec honors one contract.
+
+The codec registry (:mod:`repro.core.codec`) is only worth its seam if
+each codec is interchangeable behind it, so this module parametrizes the
+load-bearing CompBin property/differential tests over EVERY registered
+codec — and, for direct-addressing codecs, over the query engine:
+
+* encode/decode roundtrip through the registry's write/open surface,
+  including the empty graph;
+* direct addressing: ``neighbors_of``/``read_partition`` against the
+  in-memory CSR, for any vertex;
+* engine-vs-CSR byte identity through PG-Fuse, host AND device decode
+  arms (the differential the serving path stands on);
+* storage-fault behavior: a transient EIO surfaces (and retries heal
+  it), a short read raises IOError — identical contracts whichever
+  codec is under the cache;
+* the graph compiler's permutation round-trip property: reorder ->
+  query in compiled-id space -> inverse-map == the original answers,
+  for every (strategy, codec) pair.
+"""
+
+import io
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import codec, paragrapher, pgfuse
+from repro.core.csr import csr_from_edges
+from repro.graph import reorder
+from tests._prop import Draw
+from tests.conftest import FaultyStorage
+
+ALL_CODECS = sorted(codec.registered_codecs())
+DIRECT_CODECS = codec.direct_codecs()
+
+RANDOM_KW = dict(use_pgfuse=True, pgfuse_block_size=1 << 12,
+                 pgfuse_readahead=0, pgfuse_eviction=pgfuse.EVICT_CLOCK)
+
+
+def _graph(draw, max_v=2000, max_e=8000):
+    nv = draw.int(2, max_v)
+    ne = draw.int(0, max_e)
+    # dedupe: WebGraph requires strictly increasing successor lists
+    return csr_from_edges(draw.ints(0, nv - 1, ne),
+                          draw.ints(0, nv - 1, ne), nv, dedupe=True)
+
+
+@pytest.mark.parametrize("name", ALL_CODECS)
+@pytest.mark.parametrize("case", range(8))
+def test_registry_roundtrip(name, case):
+    """write -> open -> read_full is the identity for every codec."""
+    draw = Draw(np.random.default_rng(1000 + case))
+    spec = codec.get_codec(name)
+    csr = _graph(draw)
+    buf = io.BytesIO()
+    n = spec.write(buf, csr)
+    assert n == len(buf.getvalue())
+    if spec.nbytes is not None:
+        assert n == spec.nbytes(csr.n_vertices, csr.n_edges)
+    rdr = spec.open(io.BytesIO(buf.getvalue()))
+    assert (rdr.n_vertices, rdr.n_edges) == (csr.n_vertices, csr.n_edges)
+    assert rdr.read_full() == csr
+    rdr.close()
+
+
+@pytest.mark.parametrize("name", ALL_CODECS)
+def test_registry_roundtrip_empty_graph(name):
+    spec = codec.get_codec(name)
+    csr = csr_from_edges(np.zeros(0, np.int64), np.zeros(0, np.int64), 0)
+    buf = io.BytesIO()
+    spec.write(buf, csr)
+    rdr = spec.open(io.BytesIO(buf.getvalue()))
+    assert rdr.read_full() == csr
+    rdr.close()
+
+
+@pytest.mark.parametrize("name", ALL_CODECS)
+def test_magic_dispatch(name, tmp_path):
+    """detect_format routes every codec's file back to it by magic."""
+    spec = codec.get_codec(name)
+    csr = csr_from_edges(np.array([0, 1]), np.array([1, 2]), 3)
+    path = str(tmp_path / f"g.{spec.suffix}")
+    spec.write(path, csr)
+    assert paragrapher.detect_format(path) == name
+    assert codec.codec_for_magic(open(path, "rb").read(4)) is spec
+
+
+@pytest.mark.parametrize("name", DIRECT_CODECS)
+@pytest.mark.parametrize("case", range(8))
+def test_direct_addressing_random_access(name, case):
+    """O(1) adjacency access (the paper's key CompBin property) holds
+    for every direct codec, plus partition reads and offsets."""
+    draw = Draw(np.random.default_rng(1000 + case))
+    spec = codec.get_codec(name)
+    csr = _graph(draw)
+    buf = io.BytesIO()
+    spec.write(buf, csr)
+    rdr = spec.open(io.BytesIO(buf.getvalue()))
+    for v in draw.ints(0, csr.n_vertices - 1, 8):
+        np.testing.assert_array_equal(
+            rdr.neighbors_of(int(v)).astype(np.int64),
+            csr.neighbors_of(int(v)).astype(np.int64))
+    v0 = draw.int(0, csr.n_vertices - 1)
+    v1 = draw.int(v0, csr.n_vertices)
+    offs, nbrs = rdr.read_partition(v0, v1)
+    assert offs[0] == 0 and offs[-1] == len(nbrs)
+    np.testing.assert_array_equal(
+        nbrs.astype(np.int64),
+        csr.neighbors[csr.offsets[v0]:csr.offsets[v1]].astype(np.int64))
+    np.testing.assert_array_equal(rdr.offsets(v0, v1),
+                                  csr.offsets[v0:v1 + 1])
+    # raw bytes decode back through the codec-agnostic eq. (1) path
+    raw = rdr.raw_neighbor_bytes(0, csr.n_edges)
+    from repro.core import compbin
+    np.testing.assert_array_equal(
+        compbin.decode_ids(raw, rdr.b).astype(np.int64),
+        csr.neighbors.astype(np.int64))
+    rdr.close()
+
+
+@pytest.mark.parametrize("name", DIRECT_CODECS)
+def test_engine_byte_identity_host_and_device(name, tmp_path):
+    """The engine's host and device decode arms return answers byte-
+    identical to the in-memory CSR over every direct codec."""
+    from repro.query import NeighborQueryEngine
+
+    rng = np.random.default_rng(11)
+    nv, ne = 1500, 12000
+    csr = csr_from_edges(rng.integers(0, nv, ne), rng.integers(0, nv, ne),
+                         nv)
+    spec = codec.get_codec(name)
+    path = str(tmp_path / f"g.{spec.suffix}")
+    spec.write(path, csr)
+    ids = rng.integers(0, nv, 400)
+    with paragrapher.open_graph(path, **RANDOM_KW) as g:
+        assert g.format == name
+        assert g.bytes_per_id == spec.open(path).b
+        for mode in ("host", "device"):
+            with NeighborQueryEngine(g, decode=mode) as eng:
+                for v, got in zip(ids, eng.neighbors_batch(ids)):
+                    want = csr.neighbors[csr.offsets[v]:csr.offsets[v + 1]]
+                    np.testing.assert_array_equal(
+                        got, want.astype(np.int64), err_msg=f"{mode} v={v}")
+
+
+@pytest.mark.parametrize("name", DIRECT_CODECS)
+def test_faulty_storage_eio_and_short_read(name, tmp_path):
+    """Storage-fault contracts are codec-independent: with retries a
+    transient EIO heals invisibly; without, EIO propagates; a short
+    read always surfaces as IOError."""
+    import errno
+
+    rng = np.random.default_rng(5)
+    nv, ne = 400, 3000
+    csr = csr_from_edges(rng.integers(0, nv, ne), rng.integers(0, nv, ne),
+                         nv)
+    spec = codec.get_codec(name)
+    path = str(tmp_path / f"g.{spec.suffix}")
+    spec.write(path, csr)
+
+    # probe the LAST vertex: its neighbor bytes sit past the first
+    # PG-Fuse block, so the lookup must hit backing storage (vertex 7
+    # would be served from the block cached by the open-time header read)
+    probe = nv - 1
+
+    # transient EIO + retries: the answer is unaffected
+    with paragrapher.open_graph(path, **RANDOM_KW,
+                                pgfuse_retries=2) as g:
+        faults = FaultyStorage()
+        faults.install_graph(g)
+        faults.fail_at[1] = OSError(errno.EIO, "flaky OST")
+        got = g.neighbors_of(probe)
+        np.testing.assert_array_equal(
+            got.astype(np.int64),
+            csr.neighbors_of(probe).astype(np.int64))
+        assert faults.n_calls >= 2   # the retry actually happened
+
+    # EIO without retries propagates
+    with paragrapher.open_graph(path, **RANDOM_KW) as g:
+        faults = FaultyStorage()
+        faults.install_graph(g)
+        faults.fail_at[1] = OSError(errno.EIO, "flaky OST")
+        with pytest.raises(OSError):
+            g.neighbors_of(probe)
+
+    # short read surfaces as IOError, never silent truncation
+    with paragrapher.open_graph(path, **RANDOM_KW) as g:
+        faults = FaultyStorage()
+        faults.install_graph(g)
+        faults.truncate_at[1] = 3
+        with pytest.raises(IOError):
+            g.neighbors_of(probe)
+
+
+@pytest.mark.parametrize("name", DIRECT_CODECS)
+@pytest.mark.parametrize("strategy", ["bfs", "degree", "identity"])
+@pytest.mark.parametrize("case", range(3))
+def test_permutation_roundtrip_property(name, strategy, case, tmp_path):
+    """The compiler's invariant: reorder -> encode -> query in compiled
+    ids -> inverse-map == the ORIGINAL graph's answers, byte for byte,
+    for every (strategy, codec) pair."""
+    draw = Draw(np.random.default_rng(1000 + case))
+    csr = _graph(draw, max_v=600, max_e=3000)
+    src = str(tmp_path / f"in_{case}.cbin")
+    out = str(tmp_path / f"out_{case}.{codec.get_codec(name).suffix}")
+    paragrapher.save_graph(src, csr, format="compbin")
+    report = reorder.compile_graph(src, out, codec=name,
+                                   strategy=strategy, verify_samples=8)
+    assert report.strategy == strategy
+    assert os.path.exists(report.sidecar_path)
+    old_of_new = reorder.read_sidecar(report.sidecar_path)
+    new_of_old = reorder.invert_permutation(old_of_new)
+    with paragrapher.open_graph(out) as g:
+        assert g.format == name
+        for v in draw.ints(0, csr.n_vertices - 1, 12):
+            got = reorder.map_back(
+                old_of_new, g.neighbors_of(int(new_of_old[v])))
+            want = np.sort(csr.neighbors_of(int(v)).astype(np.int64))
+            np.testing.assert_array_equal(got, want)
+
+
+def test_webgraph_not_direct():
+    """The sequential codec keeps refusing the random-access surface."""
+    assert not codec.get_codec("webgraph").direct
+    assert set(DIRECT_CODECS) == {"compbin", "logcsr"}
+
+
+@pytest.mark.parametrize("name", DIRECT_CODECS)
+def test_stream_decode_policy_covers_codec(name):
+    """Every direct codec has a stream-decode placement (device for
+    b<=4) and a registered device stream decoder behind the op surface."""
+    from repro.core import policy
+    from repro.kernels.compbin_decode import packed_stream_decoder
+
+    assert policy.choose_stream_decode(name, 2).device
+    assert not policy.choose_stream_decode(name, 5).device
+    assert callable(packed_stream_decoder(name))

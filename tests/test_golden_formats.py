@@ -23,7 +23,7 @@ import pathlib
 import numpy as np
 import pytest
 
-from repro.core import compbin, featstore, paragrapher, webgraph
+from repro.core import codec, compbin, featstore, paragrapher, webgraph
 from repro.core.csr import CSR
 
 GOLDEN_DIR = pathlib.Path(__file__).parent / "golden"
@@ -72,7 +72,8 @@ def golden_features() -> dict:
 
 
 def _fixture(name: str, fmt: str) -> pathlib.Path:
-    ext = {"compbin": "cbin", "webgraph": "wg", "featstore": "fst"}[fmt]
+    ext = {"compbin": "cbin", "webgraph": "wg", "logcsr": "lgsr",
+           "featstore": "fst"}[fmt]
     return GOLDEN_DIR / f"{name}.{ext}"
 
 
@@ -82,7 +83,7 @@ def _encode(csr: CSR, fmt: str) -> bytes:
     return buf.getvalue()
 
 
-@pytest.mark.parametrize("fmt", ["compbin", "webgraph"])
+@pytest.mark.parametrize("fmt", ["compbin", "webgraph", "logcsr"])
 @pytest.mark.parametrize("name", sorted(golden_graphs()))
 def test_encoder_matches_golden_bytes(name, fmt):
     """Encoding the canonical graph reproduces the checked-in fixture
@@ -98,14 +99,15 @@ def test_encoder_matches_golden_bytes(name, fmt):
     assert got == want
 
 
-@pytest.mark.parametrize("fmt", ["compbin", "webgraph"])
+@pytest.mark.parametrize("fmt", ["compbin", "webgraph", "logcsr"])
 @pytest.mark.parametrize("name", sorted(golden_graphs()))
 def test_decoder_reads_golden_fixture(name, fmt):
     """Old files stay loadable: decoding the fixture yields the canonical
     graph (guards against decoder drift independent of the encoder)."""
     csr = golden_graphs()[name]
     reader = {"compbin": compbin.read_compbin,
-              "webgraph": webgraph.read_webgraph}[fmt]
+              "webgraph": webgraph.read_webgraph,
+              "logcsr": codec.read_logcsr}[fmt]
     got = reader(io.BytesIO(_fixture(name, fmt).read_bytes()))
     assert got == csr
 
@@ -120,6 +122,22 @@ def test_golden_headers_pin_section_layout():
     hdr2 = compbin.read_header(
         io.BytesIO(_fixture("fence300", "compbin").read_bytes()))
     assert hdr2.b == 2  # 300 vertices needs 2 bytes/ID
+
+
+def test_golden_logcsr_header_pins_section_layout():
+    """LogCSR's bit-packed offsets arithmetic seeks from header fields;
+    pin every derived quantity against the checked-in fixtures."""
+    hdr = codec.read_logcsr_header(
+        io.BytesIO(_fixture("six", "logcsr").read_bytes()))
+    assert (hdr.b, hdr.obits, hdr.n_vertices, hdr.n_edges) == (1, 4, 6, 12)
+    # 7 entries * 4 bits = 28 bits -> 4 bytes + 8 guard bytes
+    assert hdr.offsets_nbytes == 12
+    assert hdr.offsets_start == 36
+    assert hdr.neighbors_start == 36 + 12
+    assert hdr.total_size == _fixture("six", "logcsr").stat().st_size
+    hdr2 = codec.read_logcsr_header(
+        io.BytesIO(_fixture("fence300", "logcsr").read_bytes()))
+    assert (hdr2.b, hdr2.obits) == (2, 3)  # 300 vertices, 5 edges
 
 
 def _encode_features(x: np.ndarray, data_align: int) -> bytes:
@@ -168,7 +186,7 @@ def test_golden_featstore_header_pins_layout():
 def _regenerate() -> None:
     GOLDEN_DIR.mkdir(exist_ok=True)
     for name, csr in golden_graphs().items():
-        for fmt in ("compbin", "webgraph"):
+        for fmt in ("compbin", "webgraph", "logcsr"):
             p = _fixture(name, fmt)
             p.write_bytes(_encode(csr, fmt))
             print(f"wrote {p} ({p.stat().st_size}B "

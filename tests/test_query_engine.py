@@ -78,7 +78,7 @@ def test_engine_validates_inputs(graph_on_disk, tmp_path):
     wp = str(tmp_path / "g.wg")
     paragrapher.save_graph(wp, csr, format="webgraph")
     with paragrapher.open_graph(wp) as g:
-        with pytest.raises(ValueError, match="CompBin"):
+        with pytest.raises(ValueError, match="direct-addressing"):
             NeighborQueryEngine(g)
 
 

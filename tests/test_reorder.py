@@ -1,0 +1,229 @@
+"""The graph compiler (:mod:`repro.graph.reorder`): orderings,
+permutation plumbing, the sidecar format, policy selection, and the
+compile_graph end-to-end contract (including the CLI)."""
+
+import os
+import struct
+
+import numpy as np
+import pytest
+
+from repro.core import paragrapher, policy
+from repro.core.csr import csr_from_edges
+from repro.graph import reorder
+from repro.graph.generators import rmat
+from tests._prop import Draw
+
+
+def _chain(n=8):
+    """0-1-2-...-n-1 path plus a hub 0 touching everything."""
+    src = np.concatenate([np.arange(n - 1), np.zeros(n - 1, np.int64)])
+    dst = np.concatenate([np.arange(1, n), np.arange(1, n)])
+    return csr_from_edges(src, dst, n, dedupe=True)
+
+
+# ---------------------------------------------------------------------------
+# orderings
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("strategy", reorder.ORDER_FNS)
+@pytest.mark.parametrize("case", range(6))
+def test_orders_are_valid_permutations_and_deterministic(strategy, case):
+    draw = Draw(np.random.default_rng(1000 + case))
+    nv = draw.int(1, 500)
+    ne = draw.int(0, 2000)
+    csr = csr_from_edges(draw.ints(0, nv - 1, ne),
+                         draw.ints(0, nv - 1, ne), nv)
+    fn = reorder.ORDER_FNS[strategy]
+    perm = fn(csr)
+    # a permutation of 0..n-1, computed deterministically
+    np.testing.assert_array_equal(np.sort(perm), np.arange(nv))
+    np.testing.assert_array_equal(perm, fn(csr))
+
+
+def test_bfs_order_visits_levels_from_max_degree_root():
+    csr = _chain(8)
+    perm = reorder.bfs_order(csr)
+    # vertex 0 is the hub => the BFS root => new id 0; every other
+    # vertex is in level 1, renumbered in ascending old-id order
+    np.testing.assert_array_equal(perm, np.arange(8))
+
+
+def test_degree_order_puts_hubs_first():
+    csr = _chain(8)
+    perm = reorder.degree_order(csr)
+    assert perm[0] == 0  # max-degree hub gets new id 0
+    degrees = csr.degrees()
+    ranked = degrees[reorder.invert_permutation(perm)]
+    assert (np.diff(ranked) <= 0).all()  # non-increasing by new id
+
+
+def test_identity_order_is_identity():
+    csr = _chain(5)
+    np.testing.assert_array_equal(reorder.identity_order(csr), np.arange(5))
+
+
+# ---------------------------------------------------------------------------
+# permutation plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_invert_permutation_validates():
+    np.testing.assert_array_equal(
+        reorder.invert_permutation(np.array([2, 0, 1])),
+        np.array([1, 2, 0]))
+    with pytest.raises(ValueError, match="out of range"):
+        reorder.invert_permutation(np.array([0, 3]))
+    with pytest.raises(ValueError, match="out of range"):
+        reorder.invert_permutation(np.array([-1, 0]))
+    with pytest.raises(ValueError, match="duplicate"):
+        reorder.invert_permutation(np.array([1, 1, 0]))
+
+
+def test_permute_csr_relabels_rows():
+    csr = csr_from_edges(np.array([0, 0, 1]), np.array([1, 2, 2]), 3)
+    perm = np.array([2, 0, 1])  # old 0 -> new 2
+    out = reorder.permute_csr(csr, perm)
+    np.testing.assert_array_equal(out.neighbors_of(2),  # old vertex 0
+                                  np.sort(perm[csr.neighbors_of(0)]))
+    np.testing.assert_array_equal(out.neighbors_of(0),  # old vertex 1
+                                  np.sort(perm[csr.neighbors_of(1)]))
+    with pytest.raises(ValueError, match="entries"):
+        reorder.permute_csr(csr, np.array([0, 1]))
+
+
+def test_map_back_restores_original_ids():
+    old_of_new = np.array([3, 1, 0, 2])
+    got = reorder.map_back(old_of_new, np.array([2, 0, 3]))
+    np.testing.assert_array_equal(got, np.array([0, 2, 3]))
+
+
+# ---------------------------------------------------------------------------
+# the sidecar
+# ---------------------------------------------------------------------------
+
+
+def test_sidecar_roundtrip(tmp_path):
+    path = str(tmp_path / "g.lgsr.perm")
+    perm = np.random.default_rng(3).permutation(257).astype(np.int64)
+    n = reorder.write_sidecar(path, perm)
+    assert n == os.path.getsize(path) == 16 + 8 * 257
+    np.testing.assert_array_equal(reorder.read_sidecar(path), perm)
+    assert reorder.sidecar_path_for("out.lgsr") == "out.lgsr.perm"
+
+
+def test_sidecar_rejects_corruption(tmp_path):
+    path = str(tmp_path / "p.perm")
+    reorder.write_sidecar(path, np.array([1, 0, 2]))
+    blob = open(path, "rb").read()
+
+    bad = str(tmp_path / "bad.perm")
+    with open(bad, "wb") as f:          # wrong magic
+        f.write(b"NOPE" + blob[4:])
+    with pytest.raises(ValueError, match="magic"):
+        reorder.read_sidecar(bad)
+
+    with open(bad, "wb") as f:          # unsupported version
+        f.write(blob[:4] + struct.pack("<H", 9) + blob[6:])
+    with pytest.raises(ValueError, match="version"):
+        reorder.read_sidecar(bad)
+
+    with open(bad, "wb") as f:          # body shorter than promised
+        f.write(blob[:-8])
+    with pytest.raises(IOError, match="truncated"):
+        reorder.read_sidecar(bad)
+
+    with open(bad, "wb") as f:          # body is not a permutation
+        f.write(blob[:16] + struct.pack("<QQQ", 0, 0, 1))
+    with pytest.raises(ValueError, match="duplicate"):
+        reorder.read_sidecar(bad)
+
+    with pytest.raises(ValueError):     # refuse to WRITE one too
+        reorder.write_sidecar(bad, np.array([0, 0, 1]))
+
+
+# ---------------------------------------------------------------------------
+# policy selection
+# ---------------------------------------------------------------------------
+
+
+def test_choose_reorder_pins():
+    assert policy.choose_reorder(100, 0).strategy == "identity"
+    assert policy.choose_reorder(0, 0).strategy == "identity"
+    assert policy.choose_reorder(1000, 400).strategy == "degree"
+    assert policy.choose_reorder(1000, 8000).strategy == "bfs"
+    # explicit override wins regardless of shape
+    for s in policy.REORDER_STRATEGIES:
+        plan = policy.choose_reorder(1000, 8000, strategy=s)
+        assert plan.strategy == s and "explicit" in plan.reason
+    with pytest.raises(ValueError, match="unknown reorder strategy"):
+        policy.choose_reorder(10, 10, strategy="sort-by-vibes")
+
+
+# ---------------------------------------------------------------------------
+# compile_graph end to end
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("codec_name", ["compbin", "logcsr"])
+@pytest.mark.parametrize("strategy", [None, "identity", "degree"])
+def test_compile_graph_end_to_end(tmp_path, codec_name, strategy):
+    csr = rmat(scale=9, edge_factor=8, seed=4)
+    src = str(tmp_path / "in.cbin")
+    paragrapher.save_graph(src, csr, format="compbin")
+    out = str(tmp_path / f"out.{codec_name}")
+    report = reorder.compile_graph(src, out, codec=codec_name,
+                                   strategy=strategy, verify_samples=32)
+    assert report.codec == codec_name
+    assert report.verified_vertices == 32
+    assert report.out_bytes == os.path.getsize(out)
+    assert report.compression_ratio > 0
+    if strategy is not None:
+        assert report.strategy == strategy
+    d = report.as_dict()
+    assert d["compression_ratio"] == report.compression_ratio
+    # the sidecar round-trips and inverse-maps a spot-checked vertex
+    old_of_new = reorder.read_sidecar(report.sidecar_path)
+    new_of_old = reorder.invert_permutation(old_of_new)
+    with paragrapher.open_graph(out) as g:
+        assert g.n_vertices == csr.n_vertices
+        got = reorder.map_back(old_of_new, g.neighbors_of(int(new_of_old[5])))
+        np.testing.assert_array_equal(
+            got, np.sort(csr.neighbors_of(5).astype(np.int64)))
+
+
+def test_compile_graph_refuses_bad_compile(tmp_path, monkeypatch):
+    """If verification EVER fails the outputs must be removed."""
+    csr = rmat(scale=7, edge_factor=6, seed=1)
+    src = str(tmp_path / "in.cbin")
+    paragrapher.save_graph(src, csr, format="compbin")
+    out = str(tmp_path / "out.lgsr")
+
+    def sabotage(old_of_new, new_ids):
+        return np.asarray(new_ids, dtype=np.int64) + 1
+
+    monkeypatch.setattr(reorder, "map_back", sabotage)
+    with pytest.raises(AssertionError, match="diverged"):
+        reorder.compile_graph(src, out, codec="logcsr", verify_samples=4)
+    assert not os.path.exists(out)
+    assert not os.path.exists(out + ".perm")
+
+
+def test_compile_graph_cli(tmp_path, capsys):
+    import json
+
+    from repro.launch.compile_graph import main
+
+    csr = rmat(scale=8, edge_factor=6, seed=9)
+    src = str(tmp_path / "in.cbin")
+    paragrapher.save_graph(src, csr, format="compbin")
+    out = str(tmp_path / "out.lgsr")
+    rc = main(["--in", src, "--out", out, "--codec", "logcsr",
+               "--strategy", "bfs", "--verify-samples", "16"])
+    assert rc == 0
+    report = json.loads(capsys.readouterr().out)
+    assert report["codec"] == "logcsr"
+    assert report["strategy"] == "bfs"
+    assert report["verified_vertices"] == 16
+    assert os.path.exists(out) and os.path.exists(out + ".perm")
